@@ -1,0 +1,53 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(REPO, "experiments", "bench")
+
+# paper-suite subset used by default (full list via --full)
+DEFAULT_BENCHES = ["myocyte", "lavaMD", "hotspot", "sssp", "cut_1", "cut_2",
+                   "gemm", "nw"]
+SIM_SCALE = float(os.environ.get("REPRO_SIM_SCALE", "0.03"))
+MAX_CYCLES = int(os.environ.get("REPRO_SIM_MAX_CYCLES", str(1 << 17)))
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters
+
+
+def save_json(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def run_shard_worker(workload: str, devices: int, policy: str = "static",
+                     exchange: str = "window", scale: float = SIM_SCALE,
+                     timeout: int = 900) -> dict:
+    """Run one sharded simulation in a subprocess with `devices` host
+    devices (jax locks the device count per process)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    cmd = [sys.executable, "-m", "benchmarks.shard_worker",
+           "--workload", workload, "--devices", str(devices),
+           "--policy", policy, "--exchange", exchange,
+           "--scale", str(scale), "--max-cycles", str(MAX_CYCLES)]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         cwd=REPO, timeout=timeout)
+    if out.returncode != 0:
+        raise RuntimeError(f"shard worker failed: {out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])

@@ -1,0 +1,42 @@
+"""Determinism table — the paper's headline accuracy claim (0% deviation).
+
+Runs one workload under every execution mode / device count / scheduler /
+exchange policy and asserts the comparable-stats digest is IDENTICAL
+(paper: parallel == sequential, unlike GpuTejas' 7.7% / Lee et al.'s 3%).
+"""
+from __future__ import annotations
+
+from benchmarks.common import MAX_CYCLES, SIM_SCALE, run_shard_worker, \
+    save_json
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import RTX3080TI
+from repro.workloads import make_workload
+
+
+def run(workload: str = "sssp") -> list[dict]:
+    cfg = RTX3080TI
+    w = make_workload(workload, scale=SIM_SCALE)
+    ref = S.comparable(S.finalize(
+        simulate(w, cfg, make_sm_runner(cfg, "seq"), max_cycles=MAX_CYCLES)))
+    digest = tuple(sorted(ref.items()))
+    rows = []
+    vm = S.comparable(S.finalize(
+        simulate(w, cfg, make_sm_runner(cfg, "vmap"), max_cycles=MAX_CYCLES)))
+    rows.append({"name": f"determinism/{workload}/vmap", "us_per_call": 0.0,
+                 "derived": "identical" if tuple(sorted(vm.items())) == digest
+                 else "MISMATCH"})
+    for d in (2, 8, 16):
+        for policy in ("static", "dynamic"):
+            for exchange in (("window", "cycle") if d == 8 else ("window",)):
+                r = run_shard_worker(workload, d, policy, exchange)
+                ok = tuple(sorted(r["stats"].items())) == digest
+                rows.append({
+                    "name": f"determinism/{workload}/d{d}/{policy}/{exchange}",
+                    "us_per_call": r["wall_s"] * 1e6,
+                    "derived": "identical" if ok else "MISMATCH",
+                })
+    assert all("MISMATCH" not in r["derived"] for r in rows), rows
+    save_json("determinism", {"rows": rows, "ref": ref})
+    return rows

@@ -1,0 +1,36 @@
+"""Fig. 1 analogue — single-thread simulation time per workload.
+
+Reference mode = sequential (lax.map over SMs), measured on this host.
+Workloads are uniformly scaled (see workloads/synthetic.py); the figure's
+*shape* — which applications are expensive to simulate — is the deliverable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import DEFAULT_BENCHES, MAX_CYCLES, SIM_SCALE, save_json
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import RTX3080TI
+from repro.workloads import make_workload
+
+
+def run(benches=None) -> list[dict]:
+    cfg = RTX3080TI
+    rows = []
+    runner = make_sm_runner(cfg, "seq")
+    for name in benches or DEFAULT_BENCHES:
+        w = make_workload(name, scale=SIM_SCALE)
+        t0 = time.perf_counter()
+        st = simulate(w, cfg, runner, max_cycles=MAX_CYCLES)
+        jax.block_until_ready(st["ctrl"]["total_cycles"])
+        wall = time.perf_counter() - t0
+        out = S.finalize(st)
+        rows.append({"name": f"fig1/{name}", "us_per_call": wall * 1e6,
+                     "derived": f"cycles={out['cycles']};ipc={out['ipc']};"
+                                f"ctas={out['ctas_launched']}"})
+    save_json("fig1_sim_time", {"rows": rows})
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 7 analogue — CTAs per kernel per workload (at scale=1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.workloads import ALL_BENCHMARKS, make_workload
+
+
+def run(benches=None) -> list[dict]:
+    rows = []
+    for name in benches or ALL_BENCHMARKS:
+        w = make_workload(name, scale=1.0)
+        ctas = w.ctas_per_kernel()
+        rows.append({
+            "name": f"fig7/{name}", "us_per_call": 0.0,
+            "derived": f"kernels={len(ctas)};mean_ctas={np.mean(ctas):.0f};"
+                       f"min={min(ctas)};max={max(ctas)}",
+        })
+    save_json("fig7_ctas", {"rows": rows})
+    return rows

@@ -1,0 +1,59 @@
+"""Pallas kernel microbenchmarks (interpret mode — correctness-path timing;
+real MXU timing requires TPU hardware, see DESIGN.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_json, timeit
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    from repro.kernels.flash_attention.ops import (attention_ref_op,
+                                                   flash_attention_op)
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    t_k = timeit(lambda: jax.block_until_ready(
+        flash_attention_op(q, q, q, causal=True)))
+    t_r = timeit(lambda: jax.block_until_ready(
+        attention_ref_op(q, q, q, causal=True)))
+    rows.append({"name": "kernels/flash_attention", "us_per_call": t_k * 1e6,
+                 "derived": f"ref_us={t_r * 1e6:.0f}"})
+
+    from repro.kernels.wkv6.ops import wkv6_op
+    from repro.kernels.wkv6.ref import wkv_ref_chunked
+    r = jax.random.normal(key, (2, 256, 4, 64)) * 0.5
+    w = -jnp.exp(jax.random.normal(key, (2, 256, 4, 64)))
+    u = jax.random.normal(key, (4, 64)) * 0.3
+    s0 = jnp.zeros((2, 4, 64, 64), jnp.float32)
+    t_k = timeit(lambda: jax.block_until_ready(wkv6_op(r, r, r, w, u)[0]))
+    ref = jax.jit(lambda: wkv_ref_chunked(r, r, r, w, u, s0)[0])
+    t_r = timeit(lambda: jax.block_until_ready(ref()))
+    rows.append({"name": "kernels/wkv6", "us_per_call": t_k * 1e6,
+                 "derived": f"ref_us={t_r * 1e6:.0f}"})
+
+    from repro.kernels.sm_issue.ops import issue_select_op
+    from repro.kernels.sm_issue.ref import issue_select_ref
+    import numpy as np
+    from repro.sim.config import N_UNITS
+    rng = np.random.default_rng(0)
+    n_sm, W, SC, L = 80, 48, 4, 128
+    args = (jnp.asarray(rng.integers(0, L, (n_sm, W)), jnp.int32),
+            jnp.asarray(rng.random((n_sm, W)) < 0.7),
+            jnp.asarray(rng.integers(0, 30, (n_sm, W)), jnp.int32),
+            jnp.asarray(rng.integers(0, 2, (n_sm, W)), jnp.int32),
+            jnp.asarray(rng.random((n_sm, W)) < 0.3),
+            jnp.asarray(rng.integers(-1, W, (n_sm, SC)), jnp.int32),
+            jnp.asarray(rng.integers(0, 20, (n_sm, SC, N_UNITS)), jnp.int32),
+            jnp.asarray(rng.integers(0, 6, (L,)), jnp.int32),
+            jnp.asarray(rng.random((L,)) < 0.5), 10)
+    t_k = timeit(lambda: jax.block_until_ready(
+        issue_select_op(*args, n_subcores=SC)))
+    ref = jax.jit(lambda: issue_select_ref(*args, n_subcores=SC))
+    t_r = timeit(lambda: jax.block_until_ready(ref()))
+    rows.append({"name": "kernels/sm_issue", "us_per_call": t_k * 1e6,
+                 "derived": f"ref_us={t_r * 1e6:.0f}"})
+    save_json("kernels", {"rows": rows})
+    return rows

@@ -1,0 +1,61 @@
+"""§Roofline table builder — reads experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import REPO, save_json
+
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16") -> str:
+    recs = load_records(mesh)
+    lines = ["| arch | shape | dom | compute_s | memory_s | coll_s | "
+             "useful/HLO | roofline | peak GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                         f"| — | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant'][:4]} "
+            f"| {r['compute_term_s']:.3g} | {r['memory_term_s']:.3g} "
+            f"| {r['collective_term_s']:.3g} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['peak_bytes_per_dev'] / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        recs = [r for r in load_records(mesh) if not r.get("skipped")
+                and "error" not in r]
+        for r in recs:
+            rows.append({
+                "name": f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                "us_per_call": r["step_bound_s"] * 1e6,
+                "derived": f"dom={r['dominant']};"
+                           f"frac={r['roofline_fraction']:.3f};"
+                           f"useful={r['useful_flops_ratio']:.2f}",
+            })
+    save_json("roofline", {"rows": rows})
+    return rows

@@ -1,0 +1,60 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  fig1  — single-thread simulation time per workload        (paper Fig. 1)
+  fig5  — parallel speed-up vs thread/device count          (paper Fig. 5)
+  fig6  — static vs dynamic scheduler                       (paper Fig. 6)
+  fig7  — CTAs per kernel                                   (paper Fig. 7)
+  det   — determinism across modes/devices/schedulers       (paper §1/§3)
+  roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
+  kernels  — Pallas kernel microbenchmarks
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: fig1 fig5 fig6 fig7 det roofline kernels")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip subprocess device sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import (determinism, fig1_sim_time, fig5_speedup,
+                            fig6_scheduler, fig7_ctas, kernels_bench,
+                            roofline)
+
+    suites = {
+        "fig7": fig7_ctas.run,
+        "roofline": roofline.run,
+        "kernels": kernels_bench.run,
+        "fig1": fig1_sim_time.run,
+        "fig6": fig6_scheduler.run,
+        "fig5": (lambda: fig5_speedup.run(measure_shard=not args.fast)),
+        "det": determinism.run,
+    }
+    rows = []
+    failed = False
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        try:
+            rows.extend(fn())
+        except Exception:  # noqa: BLE001
+            failed = True
+            traceback.print_exc()
+            rows.append({"name": name, "us_per_call": -1.0,
+                         "derived": "ERROR"})
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

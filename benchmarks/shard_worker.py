@@ -1,0 +1,78 @@
+"""Subprocess worker: one sharded simulation at a fixed device count.
+
+Prints a single JSON line: wall time, cycles, and the comparable-stats
+digest (for cross-process determinism checks).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+# XLA_FLAGS must be set by the parent before jax import
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from repro.core import stats as S
+from repro.core.parallel import (permute_state, run_kernel_sharded,
+                                 sm_permutation)
+from repro.launch.mesh import make_host_mesh
+from repro.sim.config import RTX3080TI
+from repro.sim.state import init_state, reset_for_kernel
+from repro.workloads import make_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", required=True)
+    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--policy", default="static")
+    ap.add_argument("--exchange", default="window")
+    ap.add_argument("--scale", type=float, default=0.03)
+    ap.add_argument("--max-cycles", type=int, default=1 << 17)
+    args = ap.parse_args()
+
+    cfg = RTX3080TI
+    w = make_workload(args.workload, scale=args.scale)
+    mesh = make_host_mesh(args.devices, "sm")
+    perm = sm_permutation(cfg, args.devices, args.policy)
+
+    runner = jax.jit(partial(run_kernel_sharded, cfg=cfg, mesh=mesh,
+                             max_cycles=args.max_cycles,
+                             exchange=args.exchange))
+
+    def run_all():
+        state = permute_state(init_state(cfg), perm)
+        total = jnp.zeros((), jnp.int32)
+        for k in w.kernels:
+            state = reset_for_kernel(state, cfg)
+            state = runner(state, k.pack())
+            kc = jnp.where(state["ctrl"]["done_cycle"] >= 0,
+                           state["ctrl"]["done_cycle"],
+                           state["ctrl"]["cycle"])
+            total = total + kc
+        state["ctrl"]["total_cycles"] = total
+        jax.block_until_ready(state["ctrl"]["total_cycles"])
+        return state
+
+    state = run_all()          # compile + warmup
+    t0 = time.perf_counter()
+    state = run_all()
+    wall = time.perf_counter() - t0
+
+    out = S.finalize(state)
+    comp = S.comparable(out)
+    # per-device work balance (for the modeled-speedup / scheduler figures)
+    per_sm = out["warp_cycles_per_sm"]
+    chunks = per_sm.reshape(args.devices, -1).sum(axis=1)
+    print(json.dumps({
+        "workload": args.workload, "devices": args.devices,
+        "policy": args.policy, "exchange": args.exchange,
+        "wall_s": wall, "stats": {k: int(v) for k, v in comp.items()},
+        "per_device_work": [int(x) for x in chunks],
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper-reproduction driver: simulate benchmark suites on the modeled
+RTX 3080 Ti, report per-workload cycles/IPC/cache stats, and verify the
+determinism property on every one.
+
+Run:  PYTHONPATH=src python examples/simulate_gpu.py [--suite rodinia]
+"""
+import argparse
+import time
+
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import RTX3080TI
+from repro.workloads import SUITES, make_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="lonestar",
+                    choices=sorted(SUITES) + ["all"])
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--check-determinism", action="store_true")
+    args = ap.parse_args()
+
+    cfg = RTX3080TI
+    names = (sum(SUITES.values(), []) if args.suite == "all"
+             else SUITES[args.suite])
+    print(f"{'workload':12s} {'cycles':>9s} {'ipc':>7s} {'ctas':>6s} "
+          f"{'l1 hit%':>8s} {'dram':>8s} {'wall s':>7s}")
+    for name in names:
+        w = make_workload(name, scale=args.scale)
+        t0 = time.time()
+        st = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
+                      max_cycles=1 << 17)
+        out = S.finalize(st)
+        if args.check_determinism:
+            ref = S.finalize(simulate(w, cfg, make_sm_runner(cfg, "seq"),
+                                      max_cycles=1 << 17))
+            assert S.comparable(out) == S.comparable(ref), name
+        l1 = out["l1_hit"] / max(out["l1_hit"] + out["l1_miss"], 1) * 100
+        print(f"{name:12s} {out['cycles']:9d} {out['ipc']:7.2f} "
+              f"{out['ctas_launched']:6d} {l1:8.1f} {out['dram_req']:8d} "
+              f"{time.time() - t0:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

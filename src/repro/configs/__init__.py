@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    SHAPES, ArchConfig, MLAConfig, MoEConfig, RWKVConfig, ShapeSpec, SSMConfig,
+    get_config, get_reduced, list_archs,
+)
+
+__all__ = [
+    "SHAPES", "ArchConfig", "MLAConfig", "MoEConfig", "RWKVConfig",
+    "ShapeSpec", "SSMConfig", "get_config", "get_reduced", "list_archs",
+]

@@ -1,0 +1,21 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 arch. [hf:Qwen/CodeQwen1.5-7B; hf]"""
+from repro.configs.base import ArchConfig, register, shrink
+
+CONFIG = register(
+    ArchConfig(
+        name="codeqwen1.5-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=13440,
+        vocab_size=92416,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        source="hf:Qwen/CodeQwen1.5-7B",
+    ),
+    lambda: shrink(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=160, vocab_size=512),
+)

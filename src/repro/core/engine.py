@@ -1,0 +1,79 @@
+"""Deterministic simulation engine: quantum loop (Algorithm 1, windowed).
+
+Each machine quantum (Δ=16 cycles):
+  1. memory phase   (serial region, lines 8–19)   — full request table
+  2. CTA dispatch   (serial region, line 25)      — quantum boundary
+  3. SM phase ×Δ    (parallel region, lines 20–23) — per-SM, local
+
+The SM phase runner is injected (core/parallel.py) so the same engine body
+serves the sequential, vectorized and sharded execution modes — results are
+bit-identical by construction (tests/test_sim_determinism.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.config import GPUConfig
+from repro.sim.cta import cta_issue
+from repro.sim.memsys import mem_phase
+from repro.sim.state import init_state, reset_for_kernel
+from repro.sim.trace import Workload
+
+
+def quantum_step(state: dict, trace: dict, cfg: GPUConfig, sm_runner):
+    t0 = state["ctrl"]["cycle"]
+    req, mem, gstats = mem_phase(state["req"], state["mem"], state["stats"],
+                                 t0, cfg, sm_ids=state["ctrl"]["sm_ids"])
+    warp, ctrl, gstats = cta_issue(state["warp"], dict(state["ctrl"]),
+                                   gstats, trace, cfg)
+    warp, sm, req, stats_sm = sm_runner(warp, state["sm"], req,
+                                        state["stats_sm"], trace, t0)
+    cycle_end = t0 + cfg.quantum
+    n_instr = trace["n_instr"]
+    live = warp["active"] & ~((warp["pc"] >= n_instr)
+                              & (warp["pending"] == 0))
+    done = (ctrl["next_cta"] >= trace["n_ctas"]) & ~jnp.any(live) & \
+        jnp.all(req["stage"] == 0)
+    done_cycle = jnp.where((ctrl["done_cycle"] < 0) & done, cycle_end,
+                           ctrl["done_cycle"])
+    ctrl = dict(ctrl, cycle=cycle_end, done_cycle=done_cycle)
+    return {"warp": warp, "sm": sm, "req": req, "mem": mem, "ctrl": ctrl,
+            "stats_sm": stats_sm, "stats": gstats}
+
+
+def run_kernel(state: dict, trace: dict, cfg: GPUConfig, sm_runner,
+               max_cycles: int = 1 << 20):
+    def cond(st):
+        return (st["ctrl"]["done_cycle"] < 0) & \
+            (st["ctrl"]["cycle"] < max_cycles)
+
+    def body(st):
+        return quantum_step(st, trace, cfg, sm_runner)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def simulate(workload: Workload, cfg: GPUConfig, sm_runner,
+             max_cycles: int = 1 << 20, jit: bool = True,
+             state_transform=None) -> dict:
+    """Run all kernels of a workload; returns the final state."""
+    state = init_state(cfg)
+    runner = partial(run_kernel, cfg=cfg, sm_runner=sm_runner,
+                     max_cycles=max_cycles)
+    if jit:
+        runner = jax.jit(runner, static_argnames=())
+    total_cycles = jnp.zeros((), jnp.int32)
+    for kernel in workload.kernels:
+        state = reset_for_kernel(state, cfg)
+        if state_transform is not None:
+            state = state_transform(state)
+        state = runner(state, kernel.pack())
+        kc = jnp.where(state["ctrl"]["done_cycle"] >= 0,
+                       state["ctrl"]["done_cycle"],
+                       state["ctrl"]["cycle"])
+        total_cycles = total_cycles + kc
+    state["ctrl"]["total_cycles"] = total_cycles
+    return state

@@ -1,0 +1,195 @@
+"""Execution modes for the SM phase — the paper's `#pragma omp parallel for`.
+
+  'seq'   — lax.map over SMs: one SM at a time (single-thread reference)
+  'vmap'  — vectorized over the SM axis (single-chip SIMD parallelism)
+  'shard' — shard_map over an 'sm' device mesh axis: each device simulates
+            its SM shard; the serial region (memory system + CTA dispatch)
+            is computed REPLICATED from an all-gathered request table, which
+            preserves sequential semantics bit-exactly at any device count.
+
+SM→device assignment ("OpenMP scheduler" analogue):
+  'static'  — contiguous SM blocks per device
+  'dynamic' — deterministic load-aware deal: SMs dealt round-robin so early
+              (CTA-heavy under round-robin dispatch) SMs spread evenly.
+Both are pure relabelings of the SM axis — simulation results are identical;
+only per-device work balance changes (reported by benchmarks/scheduler.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sim.config import GPUConfig
+from repro.sim.cta import cta_issue
+from repro.sim.memsys import mem_phase
+from repro.sim.smcore import sm_quantum_single
+
+
+def make_sm_runner(cfg: GPUConfig, mode: str = "vmap", mesh: Mesh = None):
+    """Returns sm_runner(warp, sm, req, stats_sm, trace, t0)."""
+    single = partial(sm_quantum_single, cfg=cfg)
+
+    if mode == "vmap":
+        def runner(warp, sm, req, stats_sm, trace, t0):
+            return jax.vmap(
+                lambda w, s, r, st: single(w, s, r, st, trace, t0))(
+                warp, sm, req, stats_sm)
+        return runner
+
+    if mode == "seq":
+        def runner(warp, sm, req, stats_sm, trace, t0):
+            return jax.lax.map(
+                lambda a: single(a[0], a[1], a[2], a[3], trace, t0),
+                (warp, sm, req, stats_sm))
+        return runner
+
+    raise ValueError(f"unknown mode {mode!r} (shard mode uses "
+                     "make_sharded_quantum)")
+
+
+def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
+                         exchange: str = "window"):
+    """The whole quantum step under shard_map (engine.quantum_step analogue).
+
+    Per-SM arrays are sharded over the 'sm' axis; mem/ctrl/global-stats are
+    replicated.  The serial region all-gathers the (small) request table and
+    warp arrays, computes identical results on every device, and each device
+    then runs its SM shard locally for Δ cycles.
+
+    exchange='window' — one all-gather per quantum (the lookahead window,
+    beyond-paper optimization).  exchange='cycle' — additionally all-gathers
+    every inner cycle, emulating the paper's per-cycle OpenMP barrier;
+    results are bit-identical, only communication frequency differs.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_dev = mesh.shape["sm"]
+    assert cfg.n_sm % n_dev == 0, (cfg.n_sm, n_dev)
+    chunk = cfg.n_sm // n_dev
+
+    def body(warp, sm, req, stats_sm, mem, ctrl, gstats, trace):
+        t0 = ctrl["cycle"]
+        # --- serial region, replicated ---------------------------------
+        req_f = jax.tree_util.tree_map(
+            lambda x: jax.lax.all_gather(x, "sm", axis=0, tiled=True), req)
+        warp_f = jax.tree_util.tree_map(
+            lambda x: jax.lax.all_gather(x, "sm", axis=0, tiled=True), warp)
+        req_f, mem, gstats = mem_phase(req_f, mem, gstats, t0, cfg,
+                                       sm_ids=ctrl["sm_ids"])
+        warp_f, ctrl, gstats = cta_issue(warp_f, dict(ctrl), gstats, trace,
+                                         cfg)
+        i = jax.lax.axis_index("sm")
+        take = lambda x: jax.lax.dynamic_slice_in_dim(  # noqa: E731
+            x, i * chunk, chunk, axis=0)
+        req_l = jax.tree_util.tree_map(take, req_f)
+        warp_l = jax.tree_util.tree_map(take, warp_f)
+        # --- parallel region: my SM shard ------------------------------
+        if exchange == "cycle":
+            # emulate a per-cycle barrier: gather the table every cycle
+            from repro.sim.smcore import sm_cycle_single
+
+            def cyc(i, carry):
+                warp_l, sm, req_l, stats_sm, dbg = carry
+                warp_l, sm, req_l, stats_sm = jax.vmap(
+                    lambda w, s, r, st: sm_cycle_single(
+                        w, s, r, st, trace, t0 + i, cfg))(
+                    warp_l, sm, req_l, stats_sm)
+                gathered = jax.lax.all_gather(req_l["stage"], "sm", axis=0,
+                                              tiled=True)
+                dbg = dbg + jnp.sum(gathered, dtype=jnp.int32) * 0
+                return warp_l, sm, req_l, stats_sm, dbg
+
+            warp_l, sm, req_l, stats_sm, _ = jax.lax.fori_loop(
+                0, cfg.quantum, cyc,
+                (warp_l, sm, req_l, stats_sm, jnp.zeros((), jnp.int32)))
+        else:
+            warp_l, sm, req_l, stats_sm = jax.vmap(
+                lambda w, s, r, st: sm_quantum_single(w, s, r, st, trace, t0,
+                                                      cfg))(
+                warp_l, sm, req_l, stats_sm)
+        # --- done detection (replicated) --------------------------------
+        cycle_end = t0 + cfg.quantum
+        n_instr = trace["n_instr"]
+        live_l = warp_l["active"] & ~((warp_l["pc"] >= n_instr)
+                                      & (warp_l["pending"] == 0))
+        any_live = jax.lax.psum(
+            jnp.sum(live_l, dtype=jnp.int32), "sm") > 0
+        busy = jax.lax.psum(
+            jnp.sum(req_l["stage"] != 0, dtype=jnp.int32), "sm") > 0
+        done = (ctrl["next_cta"] >= trace["n_ctas"]) & ~any_live & ~busy
+        done_cycle = jnp.where((ctrl["done_cycle"] < 0) & done, cycle_end,
+                               ctrl["done_cycle"])
+        ctrl = dict(ctrl, cycle=cycle_end, done_cycle=done_cycle)
+        return warp_l, sm, req_l, stats_sm, mem, ctrl, gstats
+
+    sm_spec = P("sm")
+    rep = P()
+
+    def spec_like(tree, spec):
+        return jax.tree_util.tree_map(lambda _: spec, tree)
+
+    def sharded_step(state, trace):
+        in_specs = (spec_like(state["warp"], sm_spec),
+                    spec_like(state["sm"], sm_spec),
+                    spec_like(state["req"], sm_spec),
+                    spec_like(state["stats_sm"], sm_spec),
+                    spec_like(state["mem"], rep),
+                    spec_like(state["ctrl"], rep),
+                    spec_like(state["stats"], rep),
+                    spec_like(trace, rep))
+        out_specs = in_specs[:7]
+        fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+        warp, sm, req, stats_sm, mem, ctrl, gstats = fn(
+            state["warp"], state["sm"], state["req"], state["stats_sm"],
+            state["mem"], state["ctrl"], state["stats"], trace)
+        return {"warp": warp, "sm": sm, "req": req, "mem": mem,
+                "ctrl": ctrl, "stats_sm": stats_sm, "stats": gstats}
+
+    return sharded_step
+
+
+def run_kernel_sharded(state, trace, cfg: GPUConfig, mesh: Mesh,
+                       max_cycles: int = 1 << 20, exchange: str = "window"):
+    step = make_sharded_quantum(cfg, mesh, exchange)
+
+    def cond(st):
+        return (st["ctrl"]["done_cycle"] < 0) & \
+            (st["ctrl"]["cycle"] < max_cycles)
+
+    def body(st):
+        return step(st, trace)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+# ---------------------------------------------------------------------------
+# SM→device assignment (the OpenMP scheduler analogue)
+# ---------------------------------------------------------------------------
+
+def sm_permutation(cfg: GPUConfig, n_devices: int,
+                   policy: str = "static") -> np.ndarray:
+    sms = np.arange(cfg.n_sm)
+    if policy == "static":
+        return sms
+    if policy == "dynamic":
+        # deal SMs round-robin to devices, then concatenate per-device lists
+        per_dev = [sms[d::n_devices] for d in range(n_devices)]
+        return np.concatenate(per_dev)
+    raise ValueError(policy)
+
+
+def permute_state(state: dict, perm: np.ndarray) -> dict:
+    """Relabel the SM axis: array position p now holds SM ``perm[p]``.
+    ctrl.sm_ids records the original ids so CTA dispatch (round-robin over
+    original ids) is invariant — only the device placement changes."""
+    idx = jnp.asarray(perm, jnp.int32)
+    out = dict(state)
+    for part in ("warp", "sm", "req", "stats_sm"):
+        out[part] = jax.tree_util.tree_map(lambda x: x[idx], state[part])
+    out["ctrl"] = dict(state["ctrl"], sm_ids=state["ctrl"]["sm_ids"][idx])
+    return out

@@ -1,0 +1,38 @@
+"""Deterministic stat reduction — the paper's epilogue gather.
+
+Per-SM counters are integers, so the reduction is bit-exact regardless of
+execution mode or device count.  The per-SM bounded address sets (paper's
+set-valued stat, strategy 2) are unioned here, on the host, once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def finalize(state: dict) -> dict:
+    out = {}
+    for k, v in state["stats_sm"].items():
+        arr = np.asarray(v).astype(np.int64)
+        out[k] = int(arr.sum())
+        out[f"{k}_per_sm"] = arr
+    for k, v in state["stats"].items():
+        out[k] = int(v)
+    out["cycles"] = int(state["ctrl"].get("total_cycles",
+                                          state["ctrl"]["cycle"]))
+    # set-valued stat: union of per-SM address sets
+    aset = np.asarray(state["sm"]["addrset"]).ravel()
+    out["unique_addrs"] = int(np.unique(aset[aset >= 0]).size)
+    out["addrset_overflow"] = int(np.sum(
+        np.asarray(state["sm"]["addrset_over"])))
+    ipc = out["issued"] / max(out["cycles"], 1)
+    out["ipc"] = round(ipc, 4)
+    return out
+
+
+def comparable(stats: dict) -> dict:
+    """The subset that must be IDENTICAL across execution modes."""
+    keys = ("issued", "issued_mem", "l1_hit", "l1_miss", "l2_hit", "l2_miss",
+            "dram_req", "dram_row_hit", "ctas_launched", "cycles",
+            "unique_addrs", "cycles_issue", "stall", "warp_cycles")
+    return {k: stats[k] for k in keys}

@@ -1,0 +1,102 @@
+"""Flash-attention forward as a Pallas TPU kernel.
+
+Grid: (B·H, n_q_blocks, n_k_blocks) — the last axis iterates sequentially on
+TPU, so the online-softmax statistics (m, l, acc) live in VMEM scratch and
+persist across k-blocks.  Block shapes are MXU-aligned (multiples of 128 on
+the sequence axes; head_dim ≤ 256 kept whole in VMEM).  Causal skipping is
+block-level: k-blocks entirely above the diagonal are not computed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  bq: int, bk: int, causal: bool, scale: float,
+                  n_k_blocks: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = qi * bq + (seq_k - seq_q)       # absolute q positions
+    k_start = ki * bk
+    run = (not causal) or True                # block reachability below
+
+    @pl.when((not causal) or (k_start <= q_start + bq - 1))
+    def _body():
+        q = q_ref[0].astype(jnp.float32)      # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)      # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _flush():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q,k,v: (B,H,S,hd) -> (B,H,Sq,hd)."""
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    grid = (b * h, sq // bq, sk // bk)
+
+    def qmap(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kmap(bh, qi, ki):
+        return (bh, ki, 0)
+
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, scale=hd ** -0.5,
+        n_k_blocks=sk // bk, seq_q=sq, seq_k=sk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), qmap),
+            pl.BlockSpec((1, bk, hd), kmap),
+            pl.BlockSpec((1, bk, hd), kmap),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), qmap),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * h, sq, hd), k.reshape(b * h, sk, hd),
+      v.reshape(b * h, sk, hd))
+    return out.reshape(b, h, sq, hd)

@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def attention_ref_op(q, k, v, *, causal: bool = True):
+    return attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,85 @@
+"""Warp issue-selection as a Pallas TPU kernel.
+
+Grid: (n_sm,) — one SM's warp state per program instance, SoA int32 arrays
+resident in VMEM (48 warps × a few fields ≈ 1 KB: the whole working set of
+the simulator's hot phase fits on-chip, which is exactly why the SM loop
+vectorizes so well on TPU).  Sub-cores unroll as a static python loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.sim.config import N_UNITS, UNIT_OF_CLASS
+
+BIG = jnp.int32(1 << 30)
+
+
+def _issue_kernel(pc_ref, act_ref, rdy_ref, pend_ref, wait_ref, last_ref,
+                  uf_ref, ops_ref, dep_ref, unit_tab_ref, t_ref, sel_ref, *,
+                  n_subcores: int, n_warps: int, n_instr: int):
+    t = t_ref[0]
+    ops = ops_ref[...]
+    unit_tab = unit_tab_ref[...]
+    big = 1 << 30
+    for sc in range(n_subcores):
+        w_ids = sc + n_subcores * jax.lax.iota(jnp.int32,
+                                               n_warps // n_subcores)
+        pcs = pc_ref[0, :][w_ids]
+        exists = (act_ref[0, :][w_ids] != 0) & (pcs < n_instr)
+        blocked = (wait_ref[0, :][w_ids] != 0) & (pend_ref[0, :][w_ids] > 0)
+        ready = exists & ~blocked & (rdy_ref[0, :][w_ids] <= t)
+        op = ops[jnp.clip(pcs, 0, n_instr - 1)]
+        unit = unit_tab[op]
+        ufree = uf_ref[0, sc, :][unit] <= t
+        cand = ready & ufree
+        greedy = w_ids == last_ref[0, sc]
+        key = jnp.where(cand, jnp.where(greedy, -big, w_ids), big)
+        idx = jnp.argmin(key)
+        sel_ref[0, sc] = jnp.where(cand[idx], w_ids[idx], -1)
+
+
+def issue_select_pallas(pc, active, ready_at, pending, wait_mem, last_issued,
+                        unit_free, ops, dep, t, *, n_subcores: int,
+                        interpret: bool = True):
+    n_sm, w = pc.shape
+    L = ops.shape[0]
+    sc = n_subcores
+
+    def smmap(i):
+        return (i, 0)
+
+    def scmap(i):
+        return (i, 0, 0)
+
+    def full(i):
+        return (0,)
+
+    kern = functools.partial(_issue_kernel, n_subcores=sc, n_warps=w,
+                             n_instr=L)
+    return pl.pallas_call(
+        kern,
+        grid=(n_sm,),
+        in_specs=[
+            pl.BlockSpec((1, w), smmap),          # pc
+            pl.BlockSpec((1, w), smmap),          # active
+            pl.BlockSpec((1, w), smmap),          # ready_at
+            pl.BlockSpec((1, w), smmap),          # pending
+            pl.BlockSpec((1, w), smmap),          # wait_mem
+            pl.BlockSpec((1, sc), smmap),         # last_issued
+            pl.BlockSpec((1, sc, N_UNITS), scmap),  # unit_free
+            pl.BlockSpec((L,), full),             # ops
+            pl.BlockSpec((L,), full),             # dep
+            pl.BlockSpec((len(UNIT_OF_CLASS),), full),  # unit table
+            pl.BlockSpec((1,), full),             # t
+        ],
+        out_specs=pl.BlockSpec((1, sc), smmap),
+        out_shape=jax.ShapeDtypeStruct((n_sm, sc), jnp.int32),
+        interpret=interpret,
+    )(pc, active.astype(jnp.int32), ready_at, pending,
+      wait_mem.astype(jnp.int32), last_issued, unit_free, ops,
+      dep.astype(jnp.int32), jnp.asarray(UNIT_OF_CLASS, jnp.int32),
+      jnp.asarray([t], jnp.int32))

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the sm_issue kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.sm_issue.kernel import issue_select_pallas
+from repro.kernels.sm_issue.ref import issue_select_ref
+
+
+@partial(jax.jit, static_argnames=("n_subcores", "interpret"))
+def issue_select_op(pc, active, ready_at, pending, wait_mem, last_issued,
+                    unit_free, ops, dep, t, *, n_subcores: int,
+                    interpret: bool = True):
+    return issue_select_pallas(pc, active, ready_at, pending, wait_mem,
+                               last_issued, unit_free, ops, dep, t,
+                               n_subcores=n_subcores, interpret=interpret)

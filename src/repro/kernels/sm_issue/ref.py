@@ -1,0 +1,41 @@
+"""Pure-jnp oracle: per-sub-core warp readiness + GTO selection.
+
+This is the >93% hot phase of the simulator (paper Fig. 4) distilled to its
+selection math: for every SM and sub-core, build the candidate mask
+(active ∧ pc in range ∧ not memory-blocked ∧ scoreboard-ready ∧ dispatch
+port free) and pick the GTO winner (greedy = last-issued warp first, then
+oldest = lowest warp id).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sim.config import LDG, N_UNITS, STG, UNIT_OF_CLASS
+
+BIG = jnp.int32(1 << 30)
+
+
+def issue_select_ref(pc, active, ready_at, pending, wait_mem, last_issued,
+                     unit_free, ops, dep, t, *, n_subcores: int):
+    """Shapes: pc/active/ready_at/pending/wait_mem: (n_sm, W);
+    last_issued: (n_sm, SC); unit_free: (n_sm, SC, NU);
+    ops/dep: (L,); t: scalar.  Returns sel: (n_sm, SC) int32 (-1 = none)."""
+    n_sm, w = pc.shape
+    L = ops.shape[0]
+    sels = []
+    for sc in range(n_subcores):
+        w_ids = jnp.arange(sc, w, n_subcores, dtype=jnp.int32)
+        pcs = pc[:, w_ids]
+        exists = active[:, w_ids] & (pcs < L)
+        blocked = wait_mem[:, w_ids] & (pending[:, w_ids] > 0)
+        ready = exists & ~blocked & (ready_at[:, w_ids] <= t)
+        op = ops[jnp.clip(pcs, 0, L - 1)]
+        unit = jnp.asarray(UNIT_OF_CLASS, jnp.int32)[op]
+        ufree = jnp.take_along_axis(unit_free[:, sc, :], unit, axis=1) <= t
+        cand = ready & ufree
+        greedy = w_ids[None, :] == last_issued[:, sc:sc + 1]
+        key = jnp.where(cand, jnp.where(greedy, -1, w_ids[None, :]), BIG)
+        idx = jnp.argmin(key, axis=1)
+        any_c = jnp.take_along_axis(cand, idx[:, None], axis=1)[:, 0]
+        sels.append(jnp.where(any_c, w_ids[idx], -1))
+    return jnp.stack(sels, axis=1)

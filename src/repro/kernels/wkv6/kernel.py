@@ -1,0 +1,97 @@
+"""RWKV-6 wkv chunked linear attention as a Pallas TPU kernel.
+
+Grid: (B, H, n_chunks) — chunks iterate sequentially, the (hs × hs) wkv
+state lives in VMEM scratch.  Per chunk: inter-chunk term via an MXU matmul
+against the carried state, intra-chunk term via pairwise bounded decays
+(all exponents ≤ 0 ⇒ fp32-safe), then the state update.  Chunk size 64 ×
+head size 64 keeps the (C,C,hs) decay tensor at 1 MB fp32 in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_sc, *,
+                chunk: int, hs: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_sc[...] = jnp.zeros_like(s_sc)
+
+    rr = r_ref[0, 0].astype(jnp.float32)      # (C, hs)
+    kk = k_ref[0, 0].astype(jnp.float32)
+    vv = v_ref[0, 0].astype(jnp.float32)
+    ww = w_ref[0, 0].astype(jnp.float32)      # log-decay ≤ 0
+    uu = u_ref[0].astype(jnp.float32)         # (1, hs) -> (hs,)
+
+    L = jnp.cumsum(ww, axis=0)                # (C, hs), decreasing
+    Lprev = L - ww
+    Lend = L[-1:]                             # (1, hs)
+
+    S = s_sc[...]
+    # inter-chunk: o_t += (r_t ⊙ exp(Lprev_t)) @ S
+    o_inter = jax.lax.dot_general(
+        rr * jnp.exp(Lprev), S, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # intra-chunk (t > s): scores[t,s] = Σ_i r_t[i] k_s[i] exp(Lprev_t - L_s)
+    dexp = jnp.exp(Lprev[:, None, :] - L[None, :, :])      # (C, C, hs) ≤ 1
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.sum(rr[:, None, :] * dexp * kk[None, :, :], axis=2)
+    scores = jnp.where(tri, scores, 0.0)
+    o_intra = jax.lax.dot_general(
+        scores, vv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # bonus diagonal
+    du = jnp.sum(rr * (uu * kk), axis=1, keepdims=True)    # (C,1)
+    o_ref[0, 0] = (o_inter + o_intra + du * vv).astype(o_ref.dtype)
+    # state update: S' = exp(Lend)ᵀ⊙S + Σ_s (k_s exp(Lend - L_s)) ⊗ v_s
+    kdec = kk * jnp.exp(Lend - L)                          # (C, hs)
+    s_sc[...] = jnp.exp(Lend)[0][:, None] * S + jax.lax.dot_general(
+        kdec, vv, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        s_out_ref[0, 0] = s_sc[...]
+
+
+def wkv6_pallas(r, k, v, wlog, u, *, chunk: int = 64, interpret: bool = True):
+    """r,k,v,wlog: (B,S,H,hs); u: (H,hs). Returns (o (B,S,H,hs) f32,
+    state (B,H,hs,hs) f32).  Initial state is zero (sequence start)."""
+    b, s, h, hs = r.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    # (B,H,S,hs) layout for blocking
+    tr = lambda x: jnp.moveaxis(x, 1, 2)  # noqa: E731
+
+    def xmap(bi, hi, ci):
+        return (bi, hi, ci, 0)
+
+    def umap(bi, hi, ci):
+        return (hi, 0)
+
+    def smap(bi, hi, ci):
+        return (bi, hi, 0, 0)
+
+    kern = functools.partial(_wkv_kernel, chunk=c, hs=hs, n_chunks=nc)
+    o, s_out = pl.pallas_call(
+        kern,
+        grid=(b, h, nc),
+        in_specs=[pl.BlockSpec((1, 1, c, hs), xmap)] * 4
+        + [pl.BlockSpec((1, hs), umap)],
+        out_specs=[pl.BlockSpec((1, 1, c, hs), xmap),
+                   pl.BlockSpec((1, 1, hs, hs), smap)],
+        out_shape=[jax.ShapeDtypeStruct((b, h, s, hs), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h, hs, hs), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(wlog), u)
+    return jnp.moveaxis(o, 2, 1), s_out

@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the wkv6 kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv_ref_chunked, wkv_ref_stepwise
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_op(r, k, v, wlog, u, *, chunk: int = 64, interpret: bool = True):
+    return wkv6_pallas(r, k, v, wlog, u, chunk=chunk, interpret=interpret)

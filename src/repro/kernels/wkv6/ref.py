@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the RWKV-6 wkv kernel.
+
+``wkv_ref_stepwise`` is the literal per-token recurrence (ground truth);
+``wkv_ref_chunked`` re-exports the layer's chunked-parallel form (used in
+the model).  Tests assert kernel ≡ chunked ≡ stepwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rwkv6 import wkv_chunked as wkv_ref_chunked  # noqa: F401
+
+
+def wkv_ref_stepwise(r, k, v, wlog, u, state):
+    """r,k,v,wlog: (B,S,H,hs); u: (H,hs); state: (B,H,hs,hs) fp32."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = wlog.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs            # (B,H,hs)
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", rt, S + uf[..., None] * kv)
+        S = jnp.exp(wt)[..., None] * S + kv
+        return S, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, o = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1), state

@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count on first init.  (Overridable for fast local experiments.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces
+  · compiled.memory_analysis()  — per-device bytes (proves it fits)
+  · compiled.cost_analysis()    — per-device HLO FLOPs / bytes
+  · collective bytes parsed from the compiled SPMD HLO
+  · the three roofline terms (see launch/hlo_analysis.py)
+and writes one JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch codeqwen1.5-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--both-meshes]
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_analysis as hlo
+from repro.launch import hlo_costs
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.models import factory
+from repro.parallelism import sharding as shd
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def _opt_config(cfg) -> OptConfig:
+    big = cfg.param_count() > 1e11
+    return OptConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def _whisper_max_seq(shape) -> int:
+    return shape.seq_len
+
+
+def build_lowerable(arch: str, shape_name: str, *, multi_pod: bool,
+                    dtype=jnp.bfloat16):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports(shape):
+        return None, None, {"skipped": True,
+                            "reason": cfg.skipped_cells()[0][1]}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh)
+    n_chips = mesh.size
+
+    def named(spec_tree):
+        return shd.named(mesh, spec_tree)
+
+    key = jax.random.PRNGKey(0)
+    max_seq = shape.seq_len
+
+    if shape.kind == "train":
+        opt_cfg = _opt_config(cfg)
+        state_shapes = jax.eval_shape(
+            lambda: {
+                "params": factory.init_params(key, cfg, dtype,
+                                              max_seq=max_seq),
+                "opt": init_opt_state(
+                    factory.init_params(key, cfg, dtype, max_seq=max_seq),
+                    opt_cfg),
+                "step": jnp.zeros((), jnp.int32),
+            })
+        pspecs = shd.param_pspecs(state_shapes["params"], cfg, ctx)
+        mspecs = shd.moments_pspecs(pspecs, state_shapes["params"], ctx)
+        state_specs = {"params": pspecs,
+                       "opt": {"m": mspecs, "v": mspecs},
+                       "step": P()}
+        batch_shapes = factory.batch_specs(cfg, shape, dtype)
+        batch_specs = shd.batch_pspecs(batch_shapes, ctx)
+        step = make_train_step(cfg, opt_cfg, ctx)
+        metric_specs = {k: P() for k in
+                        ("loss", "ce", "aux", "grad_norm")}
+        fn = jax.jit(step,
+                     in_shardings=(named(state_specs), named(batch_specs)),
+                     out_shardings=(named(state_specs), named(metric_specs)),
+                     donate_argnums=(0,))
+        args = (state_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        param_shapes = jax.eval_shape(
+            lambda: factory.init_params(key, cfg, dtype, max_seq=max_seq))
+        pspecs = shd.param_pspecs(param_shapes, cfg, ctx)
+        batch_shapes = factory.batch_specs(cfg, shape, dtype)
+        batch_specs = shd.batch_pspecs(batch_shapes, ctx)
+        pf = partial(factory.prefill, cfg=cfg, ctx=ctx, max_len=shape.seq_len)
+        out_shapes = jax.eval_shape(pf, param_shapes, batch_shapes)
+        cache_specs = shd.cache_pspecs(out_shapes[1], cfg, ctx)
+        lspec = shd.logits_pspec(cfg, ctx, shape.global_batch)
+        fn = jax.jit(pf,
+                     in_shardings=(named(pspecs), named(batch_specs)),
+                     out_shardings=(named(lspec), named(cache_specs)))
+        args = (param_shapes, batch_shapes)
+    else:  # decode / long_decode
+        param_shapes = jax.eval_shape(
+            lambda: factory.init_params(key, cfg, dtype, max_seq=max_seq))
+        pspecs = shd.param_pspecs(param_shapes, cfg, ctx)
+        cache_shapes = jax.eval_shape(
+            lambda: factory.init_cache(cfg, shape.global_batch,
+                                       shape.seq_len, dtype))
+        cache_specs = shd.cache_pspecs(cache_shapes, cfg, ctx)
+        batch_shapes = factory.decode_batch_specs(cfg, shape, dtype)
+        batch_specs = shd.batch_pspecs(batch_shapes, ctx)
+        df = partial(factory.decode, cfg=cfg, ctx=ctx)
+        lspec = shd.logits_pspec(cfg, ctx, shape.global_batch)
+        fn = jax.jit(df,
+                     in_shardings=(named(pspecs), named(cache_specs),
+                                   named(batch_specs)),
+                     out_shardings=(named(lspec), named(cache_specs)),
+                     donate_argnums=(1,))
+        args = (param_shapes, cache_shapes, batch_shapes)
+    meta = {"skipped": False, "n_chips": n_chips,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind}
+    return fn, args, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    fn, args, meta = build_lowerable(arch, shape_name, multi_pod=multi_pod)
+    rec.update(meta)
+    if meta.get("skipped"):
+        if verbose:
+            print(f"[dryrun] SKIP {arch} × {shape_name}: {meta['reason']}")
+        return rec
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    costs = hlo_costs.analyze(txt)   # loop-aware FLOPs/bytes/collectives
+    n_chips = meta["n_chips"]
+    model_flops = cfg.model_flops(shape)
+    terms = hlo.roofline_terms(
+        costs.flops, costs.bytes, costs.total_coll_bytes, n_chips,
+        model_flops)
+    rec.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "output_bytes_per_dev": int(ma.output_size_in_bytes),
+        "peak_bytes_per_dev": int(ma.peak_memory_in_bytes),
+        "hlo_flops_per_dev": costs.flops,
+        "hlo_bytes_per_dev": costs.bytes,
+        "collective_bytes_per_dev": costs.total_coll_bytes,
+        "collectives": {k: {"bytes": costs.coll_bytes[k],
+                            "count": costs.coll_count[k]}
+                        for k in costs.coll_bytes},
+        "bytes_by_op": {k: round(v) for k, v in sorted(
+            costs.bytes_by_op.items(), key=lambda kv: -kv[1])},
+        "xla_flops_raw": float(ca.get("flops", 0.0)),
+        "xla_bytes_raw": float(ca.get("bytes accessed", 0.0)),
+        **terms,
+    })
+    if verbose:
+        print(f"[dryrun] OK {arch} × {shape_name} × {rec['mesh']}  "
+              f"compile={rec['compile_s']}s  "
+              f"peak/dev={rec['peak_bytes_per_dev']/2**30:.2f}GiB  "
+              f"terms(c/m/x)=({terms['compute_term_s']:.3e},"
+              f"{terms['memory_term_s']:.3e},"
+              f"{terms['collective_term_s']:.3e})s  "
+              f"dom={terms['dominant']}  "
+              f"roofline={terms['roofline_fraction']:.3f}")
+    return rec
+
+
+def save_record(rec: dict, out_dir: str = OUT_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh'].replace('x','_')}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        from repro.configs import list_archs
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                failures.append(rec)
+            save_record(rec, args.out)
+            gc.collect()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES")
+        for f in failures:
+            print("  ", f["arch"], f["shape"], f["mesh"], f["error"][:200])
+        raise SystemExit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline-term extraction from AOT-compiled artifacts.
+
+Hardware model (TPU v5e-like, per chip):
+  197 TFLOP/s bf16 · 819 GB/s HBM · ~50 GB/s/link ICI.
+
+cost_analysis() supplies per-device HLO FLOPs and bytes.  Collective bytes
+are parsed from the compiled (SPMD, per-device) HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we take the *operand* size (result size normalized by the group factor where
+the op changes shape) — i.e. bytes each device injects into the ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9]+\[.*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count_by_op.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        result_bytes = _type_bytes(m.group("type"))
+        g = _group_size(line)
+        if op == "all-gather":
+            operand = result_bytes / g          # result is g× the operand
+        elif op == "reduce-scatter":
+            operand = result_bytes * g          # operand is g× the result
+        else:                                   # all-reduce / a2a / permute
+            operand = result_bytes
+        st.bytes_by_op[op] = st.bytes_by_op.get(op, 0.0) + operand
+        st.count_by_op[op] = st.count_by_op.get(op, 0) + 1
+    return st
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, coll_bytes: float,
+                   n_chips: int, model_flops_global: float) -> dict:
+    compute_t = hlo_flops / PEAK_FLOPS
+    memory_t = hlo_bytes / HBM_BW
+    coll_t = coll_bytes / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful_t = model_flops_global / (n_chips * PEAK_FLOPS)
+    return {
+        "compute_term_s": compute_t,
+        "memory_term_s": memory_t,
+        "collective_term_s": coll_t,
+        "dominant": dominant,
+        "step_bound_s": bound,
+        "model_flops_global": model_flops_global,
+        "hlo_flops_global": hlo_flops * n_chips,
+        "useful_flops_ratio": (model_flops_global / (hlo_flops * n_chips)
+                               if hlo_flops else 0.0),
+        "roofline_fraction": useful_t / bound if bound else 0.0,
+    }

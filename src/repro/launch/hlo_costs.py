@@ -1,0 +1,252 @@
+"""Loop-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — for
+scan-over-layers models that under-counts FLOPs/bytes/collectives by the
+layer count (and by the chunk count inside attention scans).  This module
+re-derives costs from the compiled HLO text with call-graph multipliers:
+
+  flops      — dot ops: 2 · |result| · |contraction|  (MXU work)
+  bytes      — operand + result bytes of materializing ops
+               (fusion boundaries = HBM traffic; internal temps are free)
+  collectives— operand bytes per op kind (all-gather normalized by group)
+
+``while`` bodies are multiplied by ``known_trip_count`` from the backend
+config; fusions/calls are inlined.  Validated against analytic 6·N·D counts
+in tests/test_hlo_costs.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# NB: tuple types may contain /*index=N*/ comments (with '='), so the type
+# group must be permissive; the op token is the first word followed by '('.
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?.+?)\s*"
+                     r"([a-z][a-z0-9\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]*n["\s:]*"?(\d+)')
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)="
+                        r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# HBM-traffic model (fusion-ideal, i.e. what XLA:TPU would materialize —
+# XLA:CPU wraps every elementwise op in its own kLoop fusion, so counting
+# fusion boundaries would inflate the memory term ~10×):
+#   dot          — operands + result
+#   ds/gather    — 2 × result (the slice is what moves, not the operand)
+#   dus/scatter  — 2 × update operand (in-place on the big buffer)
+#   copy/transpose/reduce-window/sort — 2 × result
+#   custom-call/convolution — operands + result
+#   collectives  — operand bytes (they also appear in the collective term)
+#   fusions      — transparent: recurse, inner materializing ops count
+#   elementwise/reduce/broadcast/... — fused away, free
+_SLICE_OPS = {"dynamic-slice", "gather"}
+_UPDATE_OPS = {"dynamic-update-slice": 1, "scatter": 2}
+_RESULT2_OPS = {"copy", "transpose", "reduce-window", "sort"}
+_FULL_OPS = {"dot", "custom-call", "convolution"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+    bytes_by_op: dict = field(default_factory=dict)
+
+    def add_bytes(self, op: str, b: float):
+        self.bytes += b
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + b
+
+    def add(self, other: "Costs", mult: float = 1.0,
+            include_bytes: bool = True):
+        self.flops += other.flops * mult
+        if include_bytes:
+            self.bytes += other.bytes * mult
+            for k, v in other.bytes_by_op.items():
+                self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+def _split_computations(text: str) -> dict:
+    comps, cur, name = {}, None, None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                name = m.group(1)
+                cur = [line]
+        else:
+            cur.append(line)
+            if line.strip() == "}":
+                comps[name] = cur
+                cur = None
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                return m.group(1)
+    return None
+
+
+def analyze(text: str) -> Costs:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    memo: dict[str, Costs] = {}
+
+    def comp_cost(name: str, depth: int = 0) -> Costs:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return Costs()
+        memo[name] = Costs()          # break cycles defensively
+        lines = comps[name]
+        # symbol table: defined values + flat header params
+        sym: dict[str, str] = {}
+        for pname, ptype in _PARAM_RE.findall(lines[0]):
+            sym[pname] = ptype
+        for line in lines[1:]:
+            d = _DEF_RE.match(line)
+            if d:
+                sym[d.group(1)] = d.group(2)
+        total = Costs()
+        for line in lines[1:]:
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            _, rtype, op = d.groups()
+            # --- flops: dots --------------------------------------------
+            if op == "dot":
+                dims = _shape_dims(rtype)
+                nres = 1
+                for x in dims:
+                    nres *= x
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                args = re.search(r"\(([^)]*)\)", line[line.index(op):])
+                contr = 1
+                if cdims and args:
+                    lhs = args.group(1).split(",")[0].strip().lstrip("%")
+                    lhs_t = sym.get(lhs, "")
+                    ldims = _shape_dims(lhs_t)
+                    for ci in cdims.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            contr *= ldims[int(ci)]
+                total.flops += 2.0 * nres * contr
+            # --- bytes ---------------------------------------------------
+            def _operands():
+                if (op + "(") not in line:
+                    return []
+                m2 = re.search(r"\(([^)]*)\)", line[line.index(op + "("):])
+                if not m2:
+                    return []
+                return [a.strip().lstrip("%") for a in m2.group(1).split(",")]
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _FULL_OPS:
+                b = _type_bytes(rtype)
+                for a in _operands():
+                    if a in sym:
+                        b += _type_bytes(sym[a])
+                total.add_bytes(base, b)
+            elif base in _SLICE_OPS:
+                # 1× result: the consumer (dot) counts the read again
+                total.add_bytes(base, _type_bytes(rtype))
+            elif base in _RESULT2_OPS:
+                total.add_bytes(base, 2 * _type_bytes(rtype))
+            elif base in _UPDATE_OPS:
+                ops_ = _operands()
+                idx = _UPDATE_OPS[base]
+                if len(ops_) > idx and ops_[idx] in sym:
+                    total.add_bytes(base, 2 * _type_bytes(sym[ops_[idx]]))
+                else:
+                    total.add_bytes(base, 2 * _type_bytes(rtype))
+            elif base in _COLLECTIVES:
+                total.add_bytes(base, _type_bytes(rtype))
+            # --- collectives --------------------------------------------
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                rb = _type_bytes(rtype)
+                g = 1
+                gm = _GROUPS_RE.search(line)
+                if gm:
+                    g = max(int(gm.group(2)), 1)
+                else:
+                    gb = _GROUPS_BRACE_RE.search(line)
+                    if gb:
+                        g = max(len(gb.group(1).split(",")), 1)
+                if base_op == "all-gather":
+                    ob = rb / g
+                elif base_op == "reduce-scatter":
+                    ob = rb * g
+                else:
+                    ob = rb
+                total.coll_bytes[base_op] = \
+                    total.coll_bytes.get(base_op, 0.0) + ob
+                total.coll_count[base_op] = \
+                    total.coll_count.get(base_op, 0) + 1
+            # --- calls ---------------------------------------------------
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                for key in ("body", "condition"):
+                    cm = re.search(key + r"=%?([\w\.\-]+)", line)
+                    if cm:
+                        total.add(comp_cost(cm.group(1), depth + 1), trip)
+            elif op in ("fusion", "call", "conditional"):
+                cm = re.search(r"(?:calls|branch_computations)="
+                               r"\{?%?([\w\.\-]+)", line)
+                if cm:
+                    # fusions are transparent: inner materializing ops
+                    # (dot / ds / dus / ...) carry the traffic.
+                    total.add(comp_cost(cm.group(1), depth + 1), 1.0)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return Costs()
+    return comp_cost(entry)

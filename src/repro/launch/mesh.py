@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run forces 512 host devices; the
+single-pod mesh then uses the first 256.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallelism.ctx import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (launch/dryrun.py does this).")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(n: int | None = None, axis: str = "sm"):
+    """1-D mesh over available host devices (used by the simulator core)."""
+    devices = jax.devices()
+    n = n or len(devices)
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+
+
+def make_ctx(mesh) -> ShardCtx:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = "model" if "model" in mesh.axis_names else None
+    return ShardCtx(mesh=mesh, batch_axes=batch_axes, tp_axis=tp)

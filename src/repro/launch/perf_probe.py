@@ -1,0 +1,160 @@
+"""Perf-iteration probe: per-op-metadata attribution of FLOPs / bytes /
+collectives for one dry-run cell — the 'profiler' of the hypothesis loop
+(§Perf).  Usage:
+
+  python -m repro.launch.perf_probe --arch qwen2-72b --shape train_4k
+"""
+import os
+if "XLA_FLAGS" not in os.environ or "host_platform" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import collections
+import re
+
+from repro.launch import hlo_costs as H
+
+
+def _tag(line: str, coarse: tuple = ()) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    if not m:
+        return "?"
+    p = m.group(1)
+    for key in coarse:
+        if key in p:
+            return key
+    segs = [s for s in p.split("/") if s and not s.startswith("jit")]
+    return "/".join(segs[-2:])[:70]
+
+
+def attribute(txt: str, coarse: tuple = ()) -> dict:
+    comps = H._split_computations(txt)
+    entry = H._entry_name(txt)
+    mult = collections.defaultdict(float)
+
+    def walk(name, m, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] += m
+        for line in comps[name][1:]:
+            d = H._DEF_RE.match(line)
+            if not d:
+                continue
+            op = d.group(3)
+            if op == "while":
+                trip = 1
+                tm = H._TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                for key in ("body", "condition"):
+                    cm = re.search(key + r"=%?([\w\.\-]+)", line)
+                    if cm:
+                        walk(cm.group(1), m * trip, depth + 1)
+            elif op in ("fusion", "call", "conditional"):
+                cm = re.search(r"(?:calls|branch_computations)=\{?%?"
+                               r"([\w\.\-]+)", line)
+                if cm:
+                    walk(cm.group(1), m, depth + 1)
+
+    walk(entry, 1.0)
+    flops = collections.Counter()
+    bytes_ = collections.Counter()
+    colls = collections.Counter()
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        sym = dict(H._PARAM_RE.findall(lines[0]))
+        for line in lines[1:]:
+            d = H._DEF_RE.match(line)
+            if d:
+                sym[d.group(1)] = d.group(2)
+        for line in lines[1:]:
+            d = H._DEF_RE.match(line)
+            if not d:
+                continue
+            _, rtype, op = d.groups()
+            base = op[:-6] if op.endswith("-start") else op
+            tag = None
+            if op == "dot":
+                dims = H._shape_dims(rtype)
+                nres = 1
+                for x in dims:
+                    nres *= x
+                cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                a = re.search(r"\(([^)]*)\)", line[line.index("dot("):])
+                contr = 1
+                if cd and a:
+                    lhs = a.group(1).split(",")[0].strip().lstrip("%")
+                    ld = H._shape_dims(sym.get(lhs, ""))
+                    for ci in cd.group(1).split(","):
+                        if ci and int(ci) < len(ld):
+                            contr *= ld[int(ci)]
+                tag = _tag(line, coarse)
+                flops[tag] += 2.0 * nres * contr * m
+            if base in H._FULL_OPS:
+                b = H._type_bytes(rtype)
+                ar = re.search(r"\(([^)]*)\)", line[line.index(op + "("):]) \
+                    if (op + "(") in line else None
+                if ar:
+                    for x in ar.group(1).split(","):
+                        x = x.strip().lstrip("%")
+                        if x in sym:
+                            b += H._type_bytes(sym[x])
+                bytes_[(base, _tag(line, coarse))] += b * m
+            elif base in H._SLICE_OPS:
+                bytes_[(base, _tag(line, coarse))] += \
+                    H._type_bytes(rtype) * m
+            elif base in H._RESULT2_OPS:
+                bytes_[(base, _tag(line, coarse))] += \
+                    2 * H._type_bytes(rtype) * m
+            elif base in H._UPDATE_OPS:
+                ar = re.search(r"\(([^)]*)\)", line[line.index(op + "("):]) \
+                    if (op + "(") in line else None
+                idx = H._UPDATE_OPS[base]
+                b = None
+                if ar:
+                    ops_ = [x.strip().lstrip("%")
+                            for x in ar.group(1).split(",")]
+                    if len(ops_) > idx and ops_[idx] in sym:
+                        b = 2 * H._type_bytes(sym[ops_[idx]])
+                bytes_[(base, _tag(line, coarse))] += \
+                    (b if b is not None else 2 * H._type_bytes(rtype)) * m
+            if base in H._COLLECTIVES:
+                colls[(base, _tag(line, coarse))] += \
+                    H._type_bytes(rtype) * m
+    return {"flops": flops, "bytes": bytes_, "colls": colls}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_lowerable
+    fn, fargs, meta = build_lowerable(args.arch, args.shape,
+                                      multi_pod=args.multi_pod)
+    txt = fn.lower(*fargs).compile().as_text()
+    att = attribute(txt)
+    tf = sum(att["flops"].values())
+    print(f"== per-device dot FLOPs: {tf:.3e}  "
+          f"(compute term {tf/197e12:.2f}s)")
+    for t, f in att["flops"].most_common(args.top):
+        print(f"  {f:.3e} {f/max(tf,1)*100:5.1f}%  {t}")
+    tb = sum(att["bytes"].values())
+    print(f"== per-device HBM bytes: {tb:.3e}  (memory term {tb/819e9:.2f}s)")
+    for (op, t), b in att["bytes"].most_common(args.top):
+        print(f"  {b:.3e} {b/max(tb,1)*100:5.1f}%  [{op}] {t}")
+    tc = sum(att["colls"].values())
+    print(f"== per-device collective bytes: {tc:.3e}  "
+          f"(collective term ~{tc/50e9:.2f}s)")
+    for (op, t), b in att["colls"].most_common(args.top):
+        print(f"  {b:.3e} {b/max(tc,1)*100:5.1f}%  [{op}] {t}")
+
+
+if __name__ == "__main__":
+    main()

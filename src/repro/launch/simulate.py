@@ -1,0 +1,48 @@
+"""Simulator launcher — run paper benchmarks or LM-derived workloads.
+
+  python -m repro.launch.simulate --workload lavaMD --mode vmap
+  python -m repro.launch.simulate --arch qwen2-72b --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import RTX3080TI
+from repro.workloads import arch_workload, make_workload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--scale", type=float, default=0.03)
+    ap.add_argument("--mode", choices=["seq", "vmap"], default="vmap")
+    ap.add_argument("--max-cycles", type=int, default=1 << 17)
+    args = ap.parse_args(argv)
+
+    cfg = RTX3080TI
+    if args.arch:
+        w = arch_workload(get_config(args.arch), SHAPES[args.shape])
+    else:
+        w = make_workload(args.workload or "hotspot", scale=args.scale)
+    t0 = time.time()
+    st = simulate(w, cfg, make_sm_runner(cfg, args.mode),
+                  max_cycles=args.max_cycles)
+    jax.block_until_ready(st["ctrl"]["total_cycles"])
+    out = S.finalize(st)
+    print(json.dumps({k: v for k, v in S.comparable(out).items()}, indent=1))
+    print(f"[simulate] {w.name}: {out['cycles']} GPU cycles, "
+          f"ipc={out['ipc']}, wall={time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

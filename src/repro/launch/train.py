@@ -1,0 +1,80 @@
+"""Training launcher: data pipeline + train_step + checkpoint/restart.
+
+CPU-friendly by default (reduced config, no mesh); pass --mesh single/multi
+to run the production-sharded step (requires forced host devices).  Designed
+for SLURM-style preemption: on restart with the same --ckpt dir it resumes
+from the latest checkpoint and replays the deterministic pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ShapeSpec, get_config, get_reduced
+from repro.checkpointing.checkpoint import (AsyncSaver, latest_step, restore,
+                                            save)
+from repro.data.pipeline import DataConfig, Pipeline, make_batch_np
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.parallelism.ctx import NULL_CTX
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    if args.mesh == "none":
+        ctx = NULL_CTX
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        ctx = make_ctx(mesh)
+    opt_cfg = OptConfig(peak_lr=args.lr, warmup_steps=5,
+                        total_steps=args.steps)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg,
+                             max_seq=args.seq)
+    start = 0
+    if args.ckpt:
+        ls = latest_step(args.ckpt)
+        if ls is not None:
+            state = restore(args.ckpt, ls, state)
+            start = ls
+            print(f"[train] resumed from step {start}")
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, ctx))
+    saver = AsyncSaver()
+    pipe = Pipeline(cfg, shape, DataConfig(), start_step=start)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = next(pipe)
+        state, metrics = step_fn(state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"[train] step={step} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({time.time() - t0:.1f}s)")
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            saver.save_async(args.ckpt, step + 1, state)
+    saver.wait()
+    pipe.close()
+    print(f"[train] done: {args.steps - start} steps, "
+          f"final loss {float(metrics['loss']):.4f}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

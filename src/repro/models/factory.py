@@ -1,0 +1,126 @@
+"""Model factory: one uniform API over every assigned architecture.
+
+  init_params(key, cfg, dtype, max_seq)       -> params pytree
+  train_loss(params, batch, cfg, ctx)         -> (loss, metrics)
+  prefill(params, batch, cfg, ctx, max_len)   -> (logits, cache)
+  decode(params, cache, batch, cfg, ctx)      -> (logits, cache)
+  init_cache(cfg, batch, max_len, dtype)      -> zeroed cache pytree
+  make_batch(key, cfg, shape, dtype)          -> concrete dummy batch
+  batch_specs(cfg, shape, dtype)              -> ShapeDtypeStruct batch
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import lm, whisper
+from repro.models.loss import chunked_cross_entropy
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+AUX_WEIGHT = 0.01
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32,
+                max_seq: int = 4096) -> dict:
+    if cfg.enc_dec:
+        return whisper.init_whisper(key, cfg, dtype, max_dec_len=max_seq)
+    return lm.init_lm(key, cfg, dtype)
+
+
+def train_loss(params, batch: dict, *, cfg: ArchConfig,
+               ctx: ShardCtx = NULL_CTX):
+    if cfg.enc_dec:
+        enc_out = whisper.encode(params, batch["frames"], cfg=cfg, ctx=ctx)
+        hidden = whisper.decoder_train(params, batch["tokens"], enc_out,
+                                       cfg=cfg, ctx=ctx)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        if "embeds" in batch:
+            x = ctx.hint(batch["embeds"], ctx.batch, None, None)
+        else:
+            x = lm.embed_tokens(params, batch["tokens"], ctx)
+        b, s = x.shape[0], x.shape[1]
+        positions = lm.make_positions(cfg, b, s)
+        hidden, aux = lm.forward_hidden(params, x, cfg=cfg, ctx=ctx,
+                                        positions=positions)
+    w = (params["embed"]["emb"].T if cfg.tie_embeddings
+         else params["head"]["w"])
+    ce = chunked_cross_entropy(hidden, w, batch["labels"], ctx=ctx)
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill(params, batch: dict, *, cfg: ArchConfig,
+            ctx: ShardCtx = NULL_CTX, max_len: int = 0):
+    if cfg.enc_dec:
+        return whisper.whisper_prefill(params, batch, cfg=cfg, ctx=ctx,
+                                       max_len=max_len)
+    return lm.lm_prefill(params, batch, cfg=cfg, ctx=ctx, max_len=max_len)
+
+
+def decode(params, cache: dict, batch: dict, *, cfg: ArchConfig,
+           ctx: ShardCtx = NULL_CTX):
+    if cfg.enc_dec:
+        return whisper.whisper_decode(params, cache, batch, cfg=cfg, ctx=ctx)
+    return lm.lm_decode(params, cache, batch, cfg=cfg, ctx=ctx)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> dict:
+    if cfg.enc_dec:
+        return whisper.init_whisper_cache(cfg, batch, max_len, dtype)
+    return lm.init_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def _batch_shapes(cfg: ArchConfig, shape: ShapeSpec, dtype) -> dict:
+    """name -> (shape, dtype) for the *training/prefill* batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.enc_dec:
+        return {"frames": ((b, whisper.ENC_LEN, cfg.d_model), dtype),
+                "tokens": ((b, s), jnp.int32),
+                "labels": ((b, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        return {"embeds": ((b, s, cfg.d_model), dtype),
+                "labels": ((b, s), jnp.int32)}
+    return {"tokens": ((b, s), jnp.int32),
+            "labels": ((b, s), jnp.int32)}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in _batch_shapes(cfg, shape, dtype).items()}
+
+
+def make_batch(key, cfg: ArchConfig, shape: ShapeSpec,
+               dtype=jnp.float32) -> dict:
+    out = {}
+    for name, (sh, dt) in _batch_shapes(cfg, shape, dtype).items():
+        key, sub = jax.random.split(key)
+        if dt == jnp.int32:
+            out[name] = jax.random.randint(sub, sh, 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, sh, jnp.float32).astype(dt)
+    return out
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                       dtype=jnp.bfloat16) -> dict:
+    b = shape.global_batch
+    if cfg.frontend == "vision":
+        return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def make_decode_batch(key, cfg: ArchConfig, batch: int,
+                      dtype=jnp.float32) -> dict:
+    if cfg.frontend == "vision":
+        return {"embeds": jax.random.normal(key, (batch, 1, cfg.d_model),
+                                            jnp.float32).astype(dtype)}
+    return {"tokens": jax.random.randint(key, (batch, 1), 0, cfg.vocab_size,
+                                         dtype=jnp.int32)}

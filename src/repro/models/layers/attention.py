@@ -1,0 +1,394 @@
+"""GQA attention: init, chunked online-softmax training path, decode path.
+
+Weight layout keeps heads 3-D — wq: (d, H, hd) — so tensor parallelism can
+shard either the head axis (H % tp == 0) or the head_dim axis (hd % tp == 0,
+with block-local RoPE pairing; see rope.py).  KV heads are repeated to H
+before the score einsum (replicated KV params when KV % tp != 0).
+
+Training/prefill uses a causal *block-pair scan*: only the (q_chunk,kv_chunk)
+pairs inside the causal triangle are enumerated (static pair list), each pair
+updating an online-softmax accumulator — flash-attention dataflow expressed
+in pure JAX, so HLO FLOPs already exclude the masked upper triangle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.rope import apply_mrope, apply_rope
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+NEG_INF = -1e30
+
+
+def head_axes(ctx: ShardCtx, n_heads: int, head_dim: int):
+    """(head_axis, head_dim_axis) PartitionSpec entries for (H, hd) dims."""
+    if ctx.tp_axis is None or ctx.tp_size <= 1:
+        return None, None
+    if n_heads % ctx.tp_size == 0:
+        return ctx.tp_axis, None
+    if head_dim % ctx.tp_size == 0:
+        return None, ctx.tp_axis
+    return None, None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype, *, cross: bool = False) -> dict:
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": (scale * jax.random.normal(ks[0], (d, h, hd))).astype(dtype),
+        "wk": (scale * jax.random.normal(ks[1], (d, kv, hd))).astype(dtype),
+        "wv": (scale * jax.random.normal(ks[2], (d, kv, hd))).astype(dtype),
+        "wo": ((h * hd) ** -0.5
+               * jax.random.normal(ks[3], (h, hd, d))).astype(dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def _project_q(p, x, cfg: ArchConfig, ctx: ShardCtx):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    ha, ka = head_axes(ctx, cfg.n_heads, cfg.resolved_head_dim)
+    return ctx.hint(q, ctx.batch, None, ha, ka)
+
+
+def _project_kv(p, x, cfg: ArchConfig, ctx: ShardCtx):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return k, v
+
+
+def repeat_kv(k, n_heads: int, ctx: ShardCtx, head_dim: int,
+              hint: bool = True):
+    """(B,S,KV,hd) -> (B,S,H,hd).  hint=False on the decode path: the cache
+    is sequence-sharded and must NOT be resharded to the head layout."""
+    kvh = k.shape[2]
+    if kvh != n_heads:
+        k = jnp.repeat(k, n_heads // kvh, axis=2)
+    if not hint:
+        return k
+    ha, ka = head_axes(ctx, n_heads, head_dim)
+    return ctx.hint(k, ctx.batch, None, ha, ka)
+
+
+def _rope(q, positions, cfg: ArchConfig):
+    if cfg.rope_mode == "rope":
+        return apply_rope(q, positions, theta=cfg.rope_theta)
+    if cfg.rope_mode == "mrope":
+        return apply_mrope(q, positions, theta=cfg.rope_theta)
+    return q  # 'none' / 'sinusoidal' (handled at the embedding)
+
+
+# ---------------------------------------------------------------------------
+# core attention maths
+# ---------------------------------------------------------------------------
+
+def direct_attention(q, k, v, *, causal: bool, kv_valid=None, ctx=NULL_CTX):
+    """Materialized-score attention (small seq / decode).
+
+    q: (B,Sq,H,hd); k,v: (B,Skv,H,hd); kv_valid: (B,Skv) bool or None.
+    """
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        # query i sits at absolute position (skv - sq + i)
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshk->bqhk", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _causal_pairs(tq: int, tk: int, cq: int, ck: int):
+    """Static (i, j) block-pair list covering the causal triangle, plus
+    first/last flags per pair (row-major in i, ascending j)."""
+    pairs = []
+    for i in range(tq):
+        q_hi = (i + 1) * cq - 1
+        js = [j for j in range(tk) if j * ck <= q_hi]
+        for n, j in enumerate(js):
+            pairs.append((i, j, n == 0, n == len(js) - 1))
+    arr = np.array(pairs, dtype=np.int32)
+    return (jnp.asarray(arr[:, 0]), jnp.asarray(arr[:, 1]),
+            jnp.asarray(arr[:, 2]), jnp.asarray(arr[:, 3]))
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      chunk_q: int = 1024, chunk_k: int = 1024,
+                      direct_threshold: int = 2048, ctx=NULL_CTX):
+    """Online-softmax block attention.  q,k,v: (B,S,H,hd) (kv repeated)."""
+    b, sq, h, hd = q.shape
+    skv, dv = k.shape[1], v.shape[-1]
+    if sq <= direct_threshold and skv <= direct_threshold:
+        return direct_attention(q, k, v, causal=causal, ctx=ctx)
+    if skv <= direct_threshold and not causal:
+        # long queries over a short KV (e.g. cross-attention): chunk q only
+        cq = min(chunk_q, sq)
+        assert sq % cq == 0, (sq, cq)
+
+        def qblock(carry, i):
+            qi = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+            oi = direct_attention(qi, k, v, causal=False, ctx=ctx)
+            return carry, oi
+
+        _, blocks = jax.lax.scan(qblock, 0, jnp.arange(sq // cq))
+        return jnp.moveaxis(blocks, 0, 1).reshape(b, sq, h, dv)
+
+    cq, ck = min(chunk_q, sq), min(chunk_k, skv)
+    assert sq % cq == 0 and skv % ck == 0, (sq, cq, skv, ck)
+    tq, tk = sq // cq, skv // ck
+    if causal:
+        ii, jj, first, last = _causal_pairs(tq, tk, cq, ck)
+    else:
+        grid = np.mgrid[0:tq, 0:tk].reshape(2, -1)
+        ii = jnp.asarray(grid[0].astype(np.int32))
+        jj = jnp.asarray(grid[1].astype(np.int32))
+        first = jnp.asarray(grid[1] == 0)
+        last = jnp.asarray(grid[1] == tk - 1)
+
+    scale = hd ** -0.5
+    offset = skv - sq  # absolute position offset of q within kv (causal)
+
+    def body(carry, xs):
+        m, l, acc, out = carry
+        i, j, fst, lst = xs
+        qi = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        s = jnp.einsum("bqhk,bshk->bhqs", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * cq + jnp.arange(cq)[:, None] + offset
+            kpos = j * ck + jnp.arange(ck)[None, :]
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m0 = jnp.where(fst, NEG_INF, m)
+        l0 = jnp.where(fst, 0.0, l)
+        acc0 = jnp.where(fst, 0.0, acc)
+        m_new = jnp.maximum(m0, s.max(axis=-1))            # (B,H,Cq)
+        corr = jnp.exp(m0 - m_new)
+        p = jnp.exp(s - m_new[..., None])                  # (B,H,Cq,Ck)
+        l_new = l0 * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqs,bshk->bhqk", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc0 * corr[..., None] + pv
+        o_block = (acc_new / jnp.maximum(l_new[..., None], 1e-30))
+        o_block = jnp.transpose(o_block, (0, 2, 1, 3)).astype(q.dtype)
+        out = jax.lax.cond(
+            lst,
+            lambda o: jax.lax.dynamic_update_slice_in_dim(o, o_block, i * cq,
+                                                          axis=1),
+            lambda o: o, out)
+        return (m_new, l_new, acc_new, out), None
+
+    m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, cq), jnp.float32)
+    acc0 = jnp.zeros((b, h, cq, dv), jnp.float32)
+    out0 = jnp.zeros(q.shape[:-1] + (dv,), q.dtype)
+    (_, _, _, out), _ = jax.lax.scan(body, (m0, l0, acc0, out0),
+                                     (ii, jj, first, last))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer-level entry points
+# ---------------------------------------------------------------------------
+
+def attention_train(p, x, *, cfg: ArchConfig, ctx: ShardCtx, positions,
+                    causal: bool = True, chunk: int = 1024,
+                    return_kv: bool = False):
+    """Full-sequence attention (training / prefill)."""
+    hd = cfg.resolved_head_dim
+    q = _project_q(p, x, cfg, ctx)
+    k, v = _project_kv(p, x, cfg, ctx)
+    q = _rope(q, positions, cfg)
+    k = _rope(k, positions, cfg)
+    kf = repeat_kv(k, cfg.n_heads, ctx, hd, hint=False)
+    vf = repeat_kv(v, cfg.n_heads, ctx, hd, hint=False)
+    h_ax, hd_ax = head_axes(ctx, cfg.n_heads, hd)
+    sq = q.shape[1]
+    if (hd_ax is not None and h_ax is None and sq % ctx.tp_size == 0
+            and (sq // ctx.tp_size) >= 128 and sq == kf.shape[1]):
+        # head_dim-sharded arch on a long sequence: sequence-block-parallel
+        # attention (see seqpar_attention docstring)
+        o = seqpar_attention(q, kf, vf, causal=causal, ctx=ctx)
+    else:
+        kf = repeat_kv(kf, cfg.n_heads, ctx, hd)   # apply layout hint
+        vf = repeat_kv(vf, cfg.n_heads, ctx, hd)
+        o = chunked_attention(q, kf, vf, causal=causal, chunk_q=chunk,
+                              chunk_k=chunk, ctx=ctx)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)   # roped, pre-repeat: the KV-cache entries
+    return out
+
+
+def cross_attention_train(p, x, enc, *, cfg: ArchConfig, ctx: ShardCtx):
+    """Encoder-decoder cross attention (whisper). enc: (B,Senc,d)."""
+    hd = cfg.resolved_head_dim
+    q = _project_q(p, x, cfg, ctx)
+    k, v = _project_kv(p, enc, cfg, ctx)
+    k = repeat_kv(k, cfg.n_heads, ctx, hd)
+    v = repeat_kv(v, cfg.n_heads, ctx, hd)
+    o = chunked_attention(q, k, v, causal=False, ctx=ctx)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def seqpar_attention(q, k, v, *, causal: bool, ctx: ShardCtx,
+                     chunk_k: int = 512):
+    """Sequence-block-parallel attention for head_dim-sharded architectures
+    (n_heads % tp != 0 — phi3 40H, arctic 56H, qwen2-vl 12H).
+
+    Head-dim TP would all-reduce every (Sq×Sk) score block across the model
+    axis (the QK^T einsum contracts the sharded hd axis) — for a 32k prefill
+    that is TBs of ICI traffic per device.  Instead: queries are resharded
+    into tp sequence blocks (cheap all-to-all), K/V are gathered once per
+    layer, and each device runs an online-softmax scan over KV chunks for
+    its own query slab.  Collectives drop from O(S²·H) to O(S·H·hd).
+    """
+    b, s, h, hd = q.shape
+    dv = v.shape[-1]
+    g = ctx.tp_size
+    sg = s // g
+    ck = min(chunk_k, s)
+    nk = s // ck
+    scale = hd ** -0.5
+    # single up-front transpose to a loop-stable (b,g,h,sg,·) layout —
+    # every in-loop tensor (scores, probs, acc, m, l) shares it, so XLA
+    # inserts no per-chunk layout copies.
+    qb = jnp.moveaxis(q.reshape(b, g, sg, h, hd), 3, 2)   # (b,g,h,sg,hd)
+    qb = ctx.hint(qb, ctx.batch, ctx.tp_axis, None, None, None)
+    k = ctx.hint(k, ctx.batch, None, None, None)      # gather K over model
+    v = ctx.hint(v, ctx.batch, None, None, None)
+    kh = jnp.moveaxis(k, 2, 1)                        # (b,h,s,hd)
+    vh = jnp.moveaxis(v, 2, 1)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(kh, j * ck, ck, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(vh, j * ck, ck, axis=2)
+        sc = jnp.einsum("bghqk,bhsk->bghqs", qb, kj,
+                        preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = (jnp.arange(g)[:, None] * sg
+                    + jnp.arange(sg)[None, :])            # (g, sg)
+            kpos = j * ck + jnp.arange(ck)
+            mask = qpos[..., None] >= kpos[None, None, :]  # (g, sg, ck)
+            sc = jnp.where(mask[None, :, None, :, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p32 = jnp.exp(sc - m_new[..., None])
+        l_new = l * corr + p32.sum(axis=-1)
+        pv = jnp.einsum("bghqs,bhsk->bghqk", p32.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    # the carry inits must carry the g-sharding too — GSPMD derives the
+    # loop-invariant sharding from them (unhinted zeros ⇒ the whole scan
+    # would run replicated over the model axis, 16× redundant)
+    m0 = ctx.hint(jnp.full((b, g, h, sg), NEG_INF, jnp.float32),
+                  ctx.batch, ctx.tp_axis, None, None)
+    l0 = ctx.hint(jnp.zeros((b, g, h, sg), jnp.float32),
+                  ctx.batch, ctx.tp_axis, None, None)
+    acc0 = ctx.hint(jnp.zeros((b, g, h, sg, dv), jnp.float32),
+                    ctx.batch, ctx.tp_axis, None, None, None)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nk))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    o = jnp.moveaxis(o, 2, 3).reshape(b, s, h, dv).astype(q.dtype)
+    # back to the head_dim-sharded layout for the row-parallel out-proj
+    ha, ka = head_axes(ctx, h, hd)
+    return ctx.hint(o, ctx.batch, None, ha, ka)
+
+
+def gqa_decode_attention(q, k_cache, v_cache, kv_valid):
+    """Grouped decode attention WITHOUT materializing the KV repeat.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,S,KV,hd) (sequence-sharded);
+    kv_valid: (B,S) bool.  Each device streams its cache shard exactly once;
+    softmax statistics reduce over the sharded S axis (GSPMD → all-reduce).
+    """
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = jnp.where(kv_valid[:, None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", (p / l).astype(v_cache.dtype),
+                   v_cache, preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def init_kv_cache(cfg: ArchConfig, n_layers: int, batch: int, max_len: int,
+                  dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, kv, hd), dtype),
+    }
+
+
+def attention_decode(p, x, cache_k, cache_v, *, cfg: ArchConfig,
+                     ctx: ShardCtx, cache_len):
+    """One-token decode. x: (B,1,d); cache_k/v: (B,Smax,KV,hd);
+    cache_len: (B,) int32 current lengths.  Returns (out, new_k, new_v)."""
+    hd = cfg.resolved_head_dim
+    b, smax = cache_k.shape[0], cache_k.shape[1]
+    positions = cache_len[:, None]  # (B,1)
+    if cfg.rope_mode == "mrope":
+        pos = jnp.broadcast_to(positions[None], (3, b, 1))
+    else:
+        pos = positions
+    q = _project_q(p, x, cfg, ctx)
+    k_new, v_new = _project_kv(p, x, cfg, ctx)
+    q = _rope(q, pos, cfg)
+    k_new = _rope(k_new, pos, cfg)
+    # scatter the new token into the cache at (b, cache_len[b])
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, cache_len].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, cache_len].set(v_new[:, 0].astype(cache_v.dtype))
+    kv_valid = jnp.arange(smax)[None, :] <= cache_len[:, None]
+    o = gqa_decode_attention(q, cache_k.astype(x.dtype),
+                             cache_v.astype(x.dtype), kv_valid)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+def cross_attention_decode(p, x, cross_k, cross_v, *, cfg: ArchConfig,
+                           ctx: ShardCtx):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    hd = cfg.resolved_head_dim
+    q = _project_q(p, x, cfg, ctx)
+    k_full = repeat_kv(cross_k.astype(x.dtype), cfg.n_heads, ctx, hd)
+    v_full = repeat_kv(cross_v.astype(x.dtype), cfg.n_heads, ctx, hd)
+    o = direct_attention(q, k_full, v_full, causal=False, ctx=ctx)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))

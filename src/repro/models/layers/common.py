@@ -1,0 +1,92 @@
+"""Shared layer primitives: norms, initializers, activations, dtype policy."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    accum_dtype: jnp.dtype = jnp.float32
+
+
+F32 = Policy()
+BF16 = Policy(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.  Params: {'scale': (d,)} (+ {'bias': (d,)} for layernorm).
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(params: dict, x, *, kind: str, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        x = x + params["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+def group_norm_heads(x, scale, bias, *, eps: float = 64e-5):
+    """Per-head group norm (RWKV wkv output). x: (..., H, hs)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    if name == "swiglu":
+        raise ValueError("swiglu is handled structurally in ffn.py")
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(f"unknown activation {name}")
+
+
+def sinusoidal_embedding(length: int, dim: int, dtype=jnp.float32):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, dtype)

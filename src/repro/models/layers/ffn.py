@@ -1,0 +1,41 @@
+"""Dense feed-forward blocks: SwiGLU / GELU / squared-ReLU (nemotron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    si, so = d_model ** -0.5, d_ff ** -0.5
+    if act == "swiglu":
+        return {
+            "wi_gate": (si * jax.random.normal(ks[0], (d_model, d_ff))).astype(dtype),
+            "wi_up": (si * jax.random.normal(ks[1], (d_model, d_ff))).astype(dtype),
+            "wo": (so * jax.random.normal(ks[2], (d_ff, d_model))).astype(dtype),
+        }
+    return {
+        "wi": (si * jax.random.normal(ks[0], (d_model, d_ff))).astype(dtype),
+        "wo": (so * jax.random.normal(ks[1], (d_ff, d_model))).astype(dtype),
+    }
+
+
+def apply_ffn(p: dict, x, *, act: str, ctx: ShardCtx = NULL_CTX):
+    ff_axis = ctx.tp_if(p["wo"].shape[0])
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        if act == "gelu":
+            h = jax.nn.gelu(h)
+        elif act == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            raise ValueError(act)
+    h = ctx.hint(h, ctx.batch, None, ff_axis)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))

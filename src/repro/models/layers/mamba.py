@@ -1,0 +1,115 @@
+"""Mamba-1 selective SSM (jamba's mamba sublayer).
+
+The diagonal recurrence  h_t = exp(Δ_t·A)⊙h_{t-1} + Δ_t·B_t·u_t  is affine,
+so it is evaluated with an intra-chunk ``lax.associative_scan`` plus an
+inter-chunk carry scan — the parallelized-serial-loop pattern again
+(bit-identical to the step-by-step recurrence; asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    ks = jax.random.split(key, 7)
+    sc = d ** -0.5
+    return {
+        "wx": (sc * jax.random.normal(ks[0], (d, di))).astype(dtype),
+        "wz": (sc * jax.random.normal(ks[1], (d, di))).astype(dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (s.d_conv, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wxp": (di ** -0.5 * jax.random.normal(
+            ks[3], (di, s.dt_rank + 2 * s.d_state))).astype(dtype),
+        "wdt": (s.dt_rank ** -0.5 * jax.random.normal(
+            ks[4], (s.dt_rank, di))).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.0, dtype),   # softplus ≈ 0.018
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state))
+        ).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "wo": (di ** -0.5 * jax.random.normal(ks[5], (di, d))).astype(dtype),
+    }
+
+
+def _conv_shift(u, conv_w, conv_b, init_state):
+    """Causal depthwise conv via K shifted adds.
+    u: (B,S,di); conv_w: (K,di); init_state: (B,K-1,di)."""
+    k = conv_w.shape[0]
+    padded = jnp.concatenate([init_state.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u)
+    s = u.shape[1]
+    for i in range(k):
+        out = out + padded[:, i:i + s] * conv_w[i].astype(u.dtype)
+    return out + conv_b.astype(u.dtype), padded[:, -( k - 1):] if k > 1 else init_state
+
+
+def _ssm_params(p, uc, cfg: ArchConfig):
+    s = cfg.ssm
+    xdbc = uc @ p["wxp"].astype(uc.dtype)
+    dt_in = xdbc[..., :s.dt_rank]
+    bmat = xdbc[..., s.dt_rank:s.dt_rank + s.d_state].astype(jnp.float32)
+    cmat = xdbc[..., s.dt_rank + s.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_in @ p["wdt"].astype(uc.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                  # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di,ds)
+    return dt, a, bmat, cmat
+
+
+def ssm_chunked(dt, a, bmat, cmat, u, h0, *, chunk: int = 64):
+    """Chunked diagonal SSM scan.
+    dt: (B,S,di) fp32; a: (di,ds); bmat,cmat: (B,S,ds); u: (B,S,di);
+    h0: (B,di,ds) fp32.  Returns (y (B,S,di) fp32, h_end)."""
+    b, s, di = dt.shape
+    ds = a.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+
+    def per_chunk(h, xs):
+        dtc, bc, cc, uc = xs                         # (B,C,di) / (B,C,ds)
+        da = jnp.exp(dtc[..., None] * a)             # (B,C,di,ds) ≤ 1
+        dbu = (dtc * uc.astype(jnp.float32))[..., None] * bc[:, :, None, :]
+        # affine scan: (a2,b2)∘(a1,b1) = (a2*a1, a2*b1 + b2)
+        acc_a, acc_b = jax.lax.associative_scan(
+            lambda p1, p2: (p2[0] * p1[0], p2[0] * p1[1] + p2[1]),
+            (da, dbu), axis=1)
+        h_t = acc_a * h[:, None] + acc_b             # (B,C,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", h_t, cc)
+        return h_t[:, -1], y
+
+    xs = tuple(jnp.moveaxis(x.reshape(b, nc, c, *x.shape[2:]), 1, 0)
+               for x in (dt, bmat, cmat, u))
+    h_end, y = jax.lax.scan(per_chunk, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, di)
+    return y, h_end
+
+
+def mamba_train(p, x, conv_state, h0, *, cfg: ArchConfig,
+                ctx: ShardCtx = NULL_CTX, chunk: int = 64):
+    """x: (B,S,d); conv_state: (B,K-1,di); h0: (B,di,ds) fp32.
+    Returns (out, new_conv_state, h_end)."""
+    di = cfg.ssm.expand * cfg.d_model
+    u = x @ p["wx"].astype(x.dtype)
+    z = x @ p["wz"].astype(x.dtype)
+    u = ctx.hint(u, ctx.batch, None, ctx.tp_if(di))
+    uc, new_conv = _conv_shift(u, p["conv_w"], p["conv_b"], conv_state)
+    uc = jax.nn.silu(uc)
+    dt, a, bmat, cmat = _ssm_params(p, uc, cfg)
+    y, h_end = ssm_chunked(dt, a, bmat, cmat, uc, h0, chunk=chunk)
+    y = y.astype(x.dtype) + p["D"].astype(x.dtype) * uc
+    y = y * jax.nn.silu(z)
+    return y @ p["wo"].astype(x.dtype), new_conv, h_end
+
+
+def mamba_decode(p, x, conv_state, h, *, cfg: ArchConfig,
+                 ctx: ShardCtx = NULL_CTX):
+    """Single-step decode. x: (B,1,d)."""
+    return mamba_train(p, x, conv_state, h, cfg=cfg, ctx=ctx, chunk=1)

@@ -1,0 +1,116 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Training path materializes per-head K/V from the KV latent; the decode path
+uses the *absorbed* formulation — scores are taken directly against the
+cached latent (c_kv, k_rope), so the KV cache holds only
+(kv_lora_rank + qk_rope_head_dim) floats per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import chunked_attention, NEG_INF
+from repro.models.layers.common import apply_norm, init_norm
+from repro.models.layers.rope import apply_rope
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wdq": (s * jax.random.normal(ks[0], (d, m.q_lora_rank))).astype(dtype),
+        "q_norm": init_norm("rmsnorm", m.q_lora_rank, dtype),
+        "wuq": (m.q_lora_rank ** -0.5 * jax.random.normal(
+            ks[1], (m.q_lora_rank, h, qk + m.qk_rope_head_dim))).astype(dtype),
+        "wdkv": (s * jax.random.normal(
+            ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim))).astype(dtype),
+        "kv_norm": init_norm("rmsnorm", m.kv_lora_rank, dtype),
+        "wuk": (m.kv_lora_rank ** -0.5 * jax.random.normal(
+            ks[3], (m.kv_lora_rank, h, qk))).astype(dtype),
+        "wuv": (m.kv_lora_rank ** -0.5 * jax.random.normal(
+            ks[4], (m.kv_lora_rank, h, m.v_head_dim))).astype(dtype),
+        "wo": ((h * m.v_head_dim) ** -0.5 * jax.random.normal(
+            ks[5], (h, m.v_head_dim, d))).astype(dtype),
+    }
+
+
+def _queries(p, x, cfg: ArchConfig, ctx: ShardCtx, positions):
+    m = cfg.mla
+    cq = x @ p["wdq"].astype(x.dtype)
+    cq = apply_norm(p["q_norm"], cq, kind="rmsnorm", eps=cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(x.dtype))
+    q = ctx.hint(q, ctx.batch, None, ctx.tp_if(cfg.n_heads), None)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, cfg: ArchConfig, positions):
+    m = cfg.mla
+    ckr = x @ p["wdkv"].astype(x.dtype)            # (B,S,dc+rope)
+    ckv = apply_norm(p["kv_norm"], ckr[..., :m.kv_lora_rank],
+                     kind="rmsnorm", eps=cfg.norm_eps)
+    k_rope = apply_rope(ckr[..., None, m.kv_lora_rank:], positions,
+                        theta=cfg.rope_theta)[..., 0, :]   # (B,S,rope)
+    return ckv, k_rope
+
+
+def mla_train(p, x, *, cfg: ArchConfig, ctx: ShardCtx, positions,
+              chunk: int = 1024, return_cache: bool = False):
+    m = cfg.mla
+    q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
+    ckv, k_rope = _latents(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wuk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wuv"].astype(x.dtype))
+    k_nope = ctx.hint(k_nope, ctx.batch, None, ctx.tp_if(cfg.n_heads), None)
+    v = ctx.hint(v, ctx.batch, None, ctx.tp_if(cfg.n_heads), None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1)
+    o = chunked_attention(q, k, v, causal=True, chunk_q=chunk, chunk_k=chunk,
+                          ctx=ctx)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    if return_cache:
+        return out, (ckv, k_rope)
+    return out
+
+
+def mla_decode(p, x, cache_ckv, cache_krope, *, cfg: ArchConfig,
+               ctx: ShardCtx, cache_len):
+    """Absorbed decode.  x: (B,1,d); cache_ckv: (B,Smax,dc);
+    cache_krope: (B,Smax,rope)."""
+    m = cfg.mla
+    b, smax = cache_ckv.shape[0], cache_ckv.shape[1]
+    positions = cache_len[:, None]
+    q_nope, q_rope = _queries(p, x, cfg, ctx, positions)
+    ckv_new, krope_new = _latents(p, x, cfg, positions)
+    bidx = jnp.arange(b)
+    cache_ckv = cache_ckv.at[bidx, cache_len].set(
+        ckv_new[:, 0].astype(cache_ckv.dtype))
+    cache_krope = cache_krope.at[bidx, cache_len].set(
+        krope_new[:, 0].astype(cache_krope.dtype))
+    # absorb W_uk into q:  q_c = q_nope @ W_uk^T  -> (B,1,H,dc)
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"].astype(x.dtype))
+    s = jnp.einsum("bshr,btr->bhst", q_c, cache_ckv.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope,
+                       cache_krope.astype(x.dtype),
+                       preferred_element_type=jnp.float32)
+    s = s * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    valid = jnp.arange(smax)[None, :] <= cache_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhst,btr->bshr", prob.astype(x.dtype),
+                     cache_ckv.astype(x.dtype))      # (B,1,H,dc)
+    o = jnp.einsum("bshr,rhk->bshk", o_c, p["wuv"].astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache_ckv, cache_krope

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Tokens are split into groups (one per data shard), sorted by expert id
+inside each group (stable ⇒ deterministic), packed into a fixed-capacity
+(G, E, C, d) buffer, then resharded so experts own their slots:
+
+  placement modes (picked by ShardCtx.ep_axes, see parallelism/ctx.py):
+    'full' — experts sharded over (data×model) combined  (deepseek 256e)
+    '2d'   — experts over data, expert-FFN width over model (arctic 128e)
+    'tp'   — experts over model only                        (jamba 16e)
+
+GSPMD turns the layout change into the all-to-all; the un-dispatch is the
+reverse.  Dropped tokens (over capacity) fall into a dead slot.  The router
+runs in fp32; an auxiliary load-balance loss is returned to the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.ffn import apply_ffn, init_ffn
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 6)
+    si, so = d ** -0.5, f ** -0.5
+    p = {
+        "router": (si * jax.random.normal(ks[0], (d, e))).astype(jnp.float32),
+        "wi_gate": (si * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+        "wi_up": (si * jax.random.normal(ks[2], (e, d, f))).astype(dtype),
+        "wo": (so * jax.random.normal(ks[3], (e, f, d))).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_ffn(ks[4], d, m.n_shared_experts * f, cfg.act, dtype)
+    if m.dense_residual:
+        p["dense"] = init_ffn(ks[5], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(n_tokens * top_k * cf / n_experts) + 1
+    c = max(top_k, min(c, n_tokens * top_k))
+    return -(-c // 4) * 4  # round up to a multiple of 4
+
+
+def _dispatch_one_group(xg, top_idx, n_experts: int, capacity: int):
+    """xg: (Ng,d); top_idx: (Ng,K). Returns (buf (E,C,d), slot, keep, order)."""
+    ng, k = top_idx.shape
+    flat_e = top_idx.reshape(-1)                       # (Ng*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    pos = jnp.arange(ng * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < capacity
+    slot = jnp.where(keep, sorted_e * capacity + pos, n_experts * capacity)
+    buf = jnp.zeros((n_experts * capacity + 1, xg.shape[-1]), xg.dtype)
+    buf = buf.at[slot].set(xg[order // k])
+    return buf[:-1].reshape(n_experts, capacity, -1), slot, keep, order
+
+
+def _combine_one_group(out_buf, slot, keep, order, weights, ng: int, k: int):
+    """out_buf: (E,C,d) -> y (Ng,d)."""
+    d = out_buf.shape[-1]
+    flat = jnp.concatenate([out_buf.reshape(-1, d),
+                            jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    vals = flat[slot] * (weights[order] * keep)[:, None].astype(out_buf.dtype)
+    y = jnp.zeros((ng, d), out_buf.dtype).at[order // k].add(vals)
+    return y
+
+
+def apply_moe(p: dict, x, *, cfg: ArchConfig, ctx: ShardCtx = NULL_CTX):
+    """x: (B,S,d). Returns (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    n = b * s
+    g = ctx.dp_size if (ctx.dp_size > 1 and n % ctx.dp_size == 0
+                        and n >= ctx.dp_size * k) else 1
+    ng = n // g
+    cap = _capacity(ng, k, e, m.capacity_factor)
+
+    tokens = x.reshape(g, ng, d)
+    tokens = ctx.hint(tokens, ctx.batch, None, None)
+
+    # ---- router (fp32) -----------------------------------------------------
+    logits = jnp.einsum("gnd,de->gne", tokens.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)           # (G,Ng,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux loss (scatter-add, no (N,E) one-hot)
+    counts = jnp.zeros((e,), jnp.float32).at[top_idx[..., 0].reshape(-1)].add(1.0)
+    frac = counts / (g * ng)
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # ---- dispatch -----------------------------------------------------------
+    buf, slot, keep, order = jax.vmap(
+        lambda xg, ti: _dispatch_one_group(xg, ti, e, cap))(tokens, top_idx)
+    # buf: (G,E,C,d)
+
+    ep_axis, ff_axis = ctx.ep_axes(e, m.d_ff_expert)
+    # the group axis keeps its data sharding UNLESS the expert axis needs
+    # those mesh axes (2-D / full EP) — replicating g when experts only use
+    # the model axis would make every device compute every group (16-32×).
+    ep_set = set(ep_axis if isinstance(ep_axis, tuple) else (ep_axis,)) \
+        if ep_axis else set()
+    g_spec = None if (ep_set & set(ctx.batch_axes)) else ctx.batch
+    buf = ctx.hint(buf, g_spec, ep_axis, None, None)    # the all-to-all
+
+    compute = buf
+    gate = jnp.einsum("gecd,edf->gecf", compute, p["wi_gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", compute, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    h = ctx.hint(h, g_spec, ep_axis, None, ff_axis)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    # pin the down-proj OUTPUT to the expert layout first so SPMD keeps the
+    # einsum in expert placement, THEN reshard to token layout (the reverse
+    # all-to-all).  A single token-layout constraint makes SPMD reshard the
+    # (much larger) activations *before* the einsum instead.
+    out_buf = ctx.hint(out_buf, g_spec, ep_axis, None, None)
+    out_buf = ctx.hint(out_buf, ctx.batch, None, None, None)  # reverse a2a
+
+    y = jax.vmap(lambda ob, sl, kp, od, w:
+                 _combine_one_group(ob, sl, kp, od, w, ng, k))(
+        out_buf, slot, keep, order, top_w.reshape(g, -1))
+    y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + apply_ffn(p["shared"], x, act=cfg.act, ctx=ctx)
+    if "dense" in p:
+        y = y + apply_ffn(p["dense"], x, act=cfg.act, ctx=ctx)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,78 @@
+"""Rotary position embeddings — block-local pairing.
+
+head_dim is viewed as (hd//8) blocks of 8; rotation partners are (i, i+4)
+inside each block.  Partners therefore never cross an 8-aligned boundary, so
+the head_dim axis can be tensor-sharded (used when n_heads % tp != 0:
+phi3-medium 40H, arctic 56H, qwen2-vl 12H — see DESIGN.md) without strided
+cross-shard slicing.  The pairing is a fixed reparameterization — models are
+trained from scratch, so it is exactly as expressive as the HF layout.
+
+Supports standard RoPE and Qwen2-VL M-RoPE (3 position streams split over
+pair sections; (16,24,24) for hd=128).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ROPE_BLOCK = 8
+_HALF = ROPE_BLOCK // 2
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    """Per-pair inverse frequencies, shape (head_dim//2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def _apply_angles(x, angles):
+    """x: (..., H, hd); angles: broadcastable to x's batch dims + (hd//2,)."""
+    dt = x.dtype
+    shape = x.shape
+    hd = shape[-1]
+    nb = hd // ROPE_BLOCK
+    x = x.astype(jnp.float32).reshape(shape[:-1] + (nb, ROPE_BLOCK))
+    x1 = x[..., :_HALF]
+    x2 = x[..., _HALF:]
+    ang = angles.reshape(angles.shape[:-1] + (nb, _HALF))
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.concatenate([r1, r2], axis=-1).reshape(shape)
+    return out.astype(dt)
+
+
+def apply_rope(x, positions, *, theta: float):
+    """Standard RoPE.  x: (B, S, H, hd); positions: (B, S) int32."""
+    inv = rope_frequencies(x.shape[-1], theta)                   # (hd/2,)
+    ang = positions[..., None, None].astype(jnp.float32) * inv   # (B,S,1,hd/2)
+    return _apply_angles(x, ang)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Pair-section sizes (t, h, w): (16, 24, 24) for hd=128 (Qwen2-VL),
+    generalized to 1/4, 3/8, 3/8 of the pair count."""
+    pairs = head_dim // 2
+    t = pairs // 4
+    h = (pairs - t) // 2
+    w = pairs - t - h
+    return t, h, w
+
+
+def apply_mrope(x, positions3, *, theta: float):
+    """M-RoPE.  x: (B, S, H, hd); positions3: (3, B, S) int32 (t/h/w)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                            # (hd/2,)
+    secs = mrope_sections(hd)
+    sec_id = jnp.concatenate([
+        jnp.full((secs[0],), 0), jnp.full((secs[1],), 1),
+        jnp.full((secs[2],), 2)]).astype(jnp.int32)              # (hd/2,)
+    pos = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)    # (B, S, 3)
+    pos_per_pair = pos[..., sec_id]                              # (B, S, hd/2)
+    ang = pos_per_pair[..., None, :] * inv                       # (B,S,1,hd/2)
+    return _apply_angles(x, ang)
+
+
+def text_mrope_positions(positions):
+    """Text-only M-RoPE: all three streams equal.  (B,S) -> (3,B,S)."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

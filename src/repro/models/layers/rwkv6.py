@@ -1,0 +1,199 @@
+"""RWKV-6 ("Finch") — data-dependent-decay linear attention.
+
+The wkv recurrence  S_t = diag(w_t)·S_{t-1} + k_t ⊗ v_t,
+                    o_t = r_t·(S_{t-1} + diag(u)·k_t ⊗ v_t)
+is evaluated in *chunked parallel form*: intra-chunk pairwise decays
+(all exponents ≤ 0 ⇒ numerically safe) + an inter-chunk state scan.
+This mirrors the paper's move — the dominant serial loop is parallelized
+with bit-identical results (tests assert chunked ≡ step-by-step).
+
+``wkv_chunked`` is the pure-jnp oracle; kernels/wkv6 provides the Pallas
+version validated against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.common import apply_norm, group_norm_heads, init_norm
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+N_MIX = 5  # w, k, v, r, g
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_time_mix(key, cfg: ArchConfig, dtype) -> dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((N_MIX, d), 0.5, dtype),
+        "mix_w1": (s * jax.random.normal(ks[0], (d, N_MIX * r.mix_lora_rank))
+                   ).astype(dtype),
+        "mix_w2": (r.mix_lora_rank ** -0.5 * jax.random.normal(
+            ks[1], (N_MIX, r.mix_lora_rank, d))).astype(dtype),
+        "w0": (jnp.linspace(-6.0, -0.5, d)).astype(dtype),
+        "wd1": (s * jax.random.normal(ks[2], (d, r.decay_lora_rank))
+                ).astype(dtype),
+        "wd2": (r.decay_lora_rank ** -0.5 * jax.random.normal(
+            ks[3], (r.decay_lora_rank, d))).astype(dtype),
+        "u": (0.1 * jax.random.normal(ks[4], (d,))).astype(dtype),
+        "wr": (s * jax.random.normal(ks[5], (d, d))).astype(dtype),
+        "wk": (s * jax.random.normal(ks[6], (d, d))).astype(dtype),
+        "wv": (s * jax.random.normal(ks[7], (d, d))).astype(dtype),
+        "wg": (s * jax.random.normal(ks[8], (d, d))).astype(dtype),
+        "wo": (s * jax.random.normal(ks[9], (d, d))).astype(dtype),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def init_channel_mix(key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": (d ** -0.5 * jax.random.normal(ks[0], (d, f))).astype(dtype),
+        "wv": (f ** -0.5 * jax.random.normal(ks[1], (f, d))).astype(dtype),
+        "wr": (d ** -0.5 * jax.random.normal(ks[2], (d, d))).astype(dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv core — chunked parallel oracle
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, wlog, u, state, *, chunk: int = 64):
+    """r,k,v,wlog: (B,S,H,hs) (wlog = log decay ≤ 0, fp32);
+    u: (H,hs); state: (B,H,hs,hs) fp32.  Returns (o, new_state)."""
+    b, s, h, hs = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    rc = r.reshape(b, nc, c, h, hs).astype(jnp.float32)
+    kc = k.reshape(b, nc, c, h, hs).astype(jnp.float32)
+    vc = v.reshape(b, nc, c, h, hs).astype(jnp.float32)
+    wc = wlog.reshape(b, nc, c, h, hs).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def per_chunk(S, xs):
+        rr, kk, vv, ww = xs                      # (B,C,H,hs)
+        L = jnp.cumsum(ww, axis=1)               # inclusive logs, ≤0, decreasing
+        Lprev = L - ww
+        Lend = L[:, -1:]                         # (B,1,H,hs)
+        # inter-chunk: o_t += (r_t ⊙ exp(Lprev_t)) @ S
+        o_inter = jnp.einsum("bthi,bhij->bthj", rr * jnp.exp(Lprev), S)
+        # intra-chunk pairwise decays (t>s): exp(Lprev_t - L_s) ≤ 1
+        Dexp = jnp.exp(Lprev[:, :, None] - L[:, None, :])   # (B,C,C,H,hs)
+        mask = jnp.tril(jnp.ones((c, c), bool), -1)[None, :, :, None, None]
+        Dexp = jnp.where(mask, Dexp, 0.0)
+        scores = jnp.einsum("bthi,bshi,btshi->bhts", rr, kk, Dexp)
+        o_intra = jnp.einsum("bhts,bshj->bthj", scores, vv)
+        # bonus diagonal
+        du = jnp.einsum("bthi,bthi->bth", rr, uf * kk)
+        o_diag = du[..., None] * vv
+        # state update: S' = exp(Lend)⊙S + Σ_s exp(Lend - L_s)⊙k_s ⊗ v_s
+        kdec = kk * jnp.exp(Lend - L)
+        S_new = jnp.exp(Lend)[:, 0, :, :, None] * S + \
+            jnp.einsum("bshi,bshj->bhij", kdec, vv)
+        return S_new, o_inter + o_intra + o_diag
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, wc))
+    state, o = jax.lax.scan(per_chunk, state.astype(jnp.float32), xs)
+    o = jnp.moveaxis(o, 0, 1).reshape(b, s, h, hs)
+    return o, state
+
+
+def wkv_step(r, k, v, wlog, u, state):
+    """Single decode step. r,k,v,wlog: (B,H,hs); state: (B,H,hs,hs) fp32."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]          # (B,H,hs,hs)
+    o = jnp.einsum("bhi,bhij->bhj", rf, state + uf[..., None] * kv)
+    state = jnp.exp(wlog.astype(jnp.float32))[..., None] * state + kv
+    return o, state
+
+
+# ---------------------------------------------------------------------------
+# layer entry points
+# ---------------------------------------------------------------------------
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift mixes.  Returns (xw,xk,xv,xr,xg)."""
+    dx = x_prev - x
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    mr = p["mix_w2"].shape[1]
+    lora = jnp.tanh(xxx @ p["mix_w1"].astype(x.dtype))
+    lora = lora.reshape(lora.shape[:-1] + (N_MIX, mr))
+    mix = p["mu"].astype(x.dtype) + jnp.einsum(
+        "bsnr,nrd->bsnd", lora, p["mix_w2"].astype(x.dtype))
+    return tuple(x + dx * mix[..., i, :] for i in range(N_MIX))
+
+
+def _decay_log(p, xw):
+    w_raw = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(xw @ p["wd1"].astype(xw.dtype)).astype(jnp.float32) @ \
+        p["wd2"].astype(jnp.float32)
+    return -jnp.exp(w_raw)          # log decay ≤ 0
+
+
+def time_mix_train(p, x, shift_state, wkv_state, *, cfg: ArchConfig,
+                   ctx: ShardCtx = NULL_CTX, chunk: int = 64,
+                   use_kernel: bool = False):
+    """x: (B,S,d). Returns (out, new_shift, new_wkv_state).
+    use_kernel routes the wkv recurrence through the Pallas kernel
+    (kernels/wkv6; train path only — initial state is zero)."""
+    hs = cfg.rwkv.head_size
+    b, s, d = x.shape
+    h = d // hs
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    wlog = _decay_log(p, xw).reshape(b, s, h, hs)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, s, h, hs)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, s, h, hs)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, s, h, hs)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    r = ctx.hint(r, ctx.batch, None, ctx.tp_if(h), None)
+    k = ctx.hint(k, ctx.batch, None, ctx.tp_if(h), None)
+    v = ctx.hint(v, ctx.batch, None, ctx.tp_if(h), None)
+    u = p["u"].astype(jnp.float32).reshape(h, hs)
+    if use_kernel and s > 1:
+        # Pallas kernel path (zero initial state = sequence start)
+        from repro.kernels.wkv6.ops import wkv6_op
+        o, wkv_state = wkv6_op(r, k, v, wlog, u, chunk=chunk)
+    else:
+        o, wkv_state = wkv_chunked(r, k, v, wlog, u, wkv_state, chunk=chunk)
+    o = group_norm_heads(o.astype(x.dtype),
+                         p["gn_scale"].reshape(h, hs),
+                         p["gn_bias"].reshape(h, hs))
+    o = o.reshape(b, s, d) * g
+    return o @ p["wo"].astype(x.dtype), x[:, -1], wkv_state
+
+
+def time_mix_decode(p, x, shift_state, wkv_state, *, cfg: ArchConfig,
+                    ctx: ShardCtx = NULL_CTX):
+    """x: (B,1,d)."""
+    out, new_shift, wkv_state = time_mix_train(
+        p, x, shift_state, wkv_state, cfg=cfg, ctx=ctx, chunk=1)
+    return out, new_shift, wkv_state
+
+
+def channel_mix(p, x, shift_state, *, cfg: ArchConfig,
+                ctx: ShardCtx = NULL_CTX):
+    """x: (B,S,d). Returns (out, new_shift)."""
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kk = ctx.hint(kk, ctx.batch, None, ctx.tp_if(kk.shape[-1]))
+    kv = kk @ p["wv"].astype(x.dtype)
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv
+    return out, x[:, -1]

@@ -1,0 +1,444 @@
+"""Decoder-LM assembly for all assigned families.
+
+An architecture is a list of *groups*; each group is `count` structurally
+identical blocks whose parameters are stacked on a leading layer axis and
+executed with `lax.scan` (+ per-block remat).  Heterogeneous stacks
+(deepseek dense-prefix, jamba periods) are expressed as multiple groups /
+period-internal python loops, keeping the HLO small enough to compile the
+full 61-80 layer models for 512 devices.
+
+Group kinds:
+  'std:dense' / 'std:moe'  — GQA attention + (dense | MoE) FFN
+  'mla:dense' / 'mla:moe'  — DeepSeek MLA + (dense | MoE) FFN
+  'rwkv'                   — RWKV-6 time-mix + channel-mix
+  'period'                 — jamba 8-sublayer period (attn@4, MoE on odd)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import attention as attn
+from repro.models.layers import mamba as mam
+from repro.models.layers import mla as mla_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers import rwkv6 as rwkv
+from repro.models.layers.common import apply_norm, init_norm
+from repro.models.layers.ffn import apply_ffn, init_ffn
+from repro.models.layers.rope import text_mrope_positions
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+VOCAB_PAD = 32
+
+
+# ---------------------------------------------------------------------------
+# architecture -> group plan
+# ---------------------------------------------------------------------------
+
+def group_plan(cfg: ArchConfig) -> list[tuple[str, int]]:
+    if cfg.block_pattern is not None:
+        period = len(cfg.block_pattern)
+        assert cfg.n_layers % period == 0
+        return [("period", cfg.n_layers // period)]
+    if cfg.family == "ssm":
+        return [("rwkv", cfg.n_layers)]
+    attn_kind = "mla" if cfg.mla is not None else "std"
+    if cfg.moe is None:
+        return [(f"{attn_kind}:dense", cfg.n_layers)]
+    if cfg.moe.layer_mode == "after_prefix":
+        return [(f"{attn_kind}:dense", cfg.n_dense_prefix),
+                (f"{attn_kind}:moe", cfg.n_layers - cfg.n_dense_prefix)]
+    return [(f"{attn_kind}:moe", cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 20)
+    if kind == "rwkv":
+        return {
+            "ln1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "tm": rwkv.init_time_mix(ks[0], cfg, dtype),
+            "ln2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "cm": rwkv.init_channel_mix(ks[1], cfg, dtype),
+        }
+    if kind == "period":
+        p = {}
+        for i, sub in enumerate(cfg.block_pattern):
+            mixer = (attn.init_attention(ks[2 * i], cfg, dtype)
+                     if sub == "attn" else mam.init_mamba(ks[2 * i], cfg, dtype))
+            is_moe = cfg.moe is not None and i % 2 == 1
+            mlp = (moe_mod.init_moe(ks[2 * i + 1], cfg, dtype) if is_moe
+                   else init_ffn(ks[2 * i + 1], cfg.d_model, cfg.d_ff,
+                                 cfg.act, dtype))
+            p[f"sub{i}"] = {
+                "norm": init_norm(cfg.norm, cfg.d_model, dtype),
+                ("attn" if sub == "attn" else "mamba"): mixer,
+                "mlp_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+                ("moe" if is_moe else "mlp"): mlp,
+            }
+        return p
+    attn_kind, mlp_kind = kind.split(":")
+    mixer = (mla_mod.init_mla(ks[0], cfg, dtype) if attn_kind == "mla"
+             else attn.init_attention(ks[0], cfg, dtype))
+    mlp = (moe_mod.init_moe(ks[1], cfg, dtype) if mlp_kind == "moe"
+           else init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype))
+    return {
+        "attn_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        ("attn" if attn_kind == "std" else "mla"): mixer,
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        ("moe" if mlp_kind == "moe" else "mlp"): mlp,
+    }
+
+
+def init_lm(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    vp = cfg.padded_vocab(VOCAB_PAD)
+    keys = jax.random.split(key, 3 + len(group_plan(cfg)))
+    params = {
+        "embed": {"emb": (0.02 * jax.random.normal(
+            keys[0], (vp, cfg.d_model))).astype(dtype)},
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": (cfg.d_model ** -0.5 * jax.random.normal(
+            keys[1], (cfg.d_model, vp))).astype(dtype)}
+    groups = []
+    for gi, (kind, count) in enumerate(group_plan(cfg)):
+        gkeys = jax.random.split(keys[3 + gi], count)
+        groups.append(jax.vmap(
+            partial(_init_block, kind=kind, cfg=cfg, dtype=dtype))(gkeys))
+    params["groups"] = groups
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block apply — train (no cache)
+# ---------------------------------------------------------------------------
+
+def _mlp_or_moe(p, x, aux, cfg, ctx):
+    if "moe" in p:
+        y, a = moe_mod.apply_moe(p["moe"], x, cfg=cfg, ctx=ctx)
+        return y, aux + a
+    return apply_ffn(p["mlp"], x, act=cfg.act, ctx=ctx), aux
+
+
+def _block_train(p, x, aux, *, kind: str, cfg: ArchConfig, ctx: ShardCtx,
+                 positions):
+    nk, eps = cfg.norm, cfg.norm_eps
+    if kind == "rwkv":
+        b, _, d = x.shape
+        h = cfg.d_model // cfg.rwkv.head_size
+        hs = cfg.rwkv.head_size
+        zshift = jnp.zeros((b, d), x.dtype)
+        zstate = jnp.zeros((b, h, hs, hs), jnp.float32)
+        y, _, _ = rwkv.time_mix_train(
+            p["tm"], apply_norm(p["ln1"], x, kind=nk, eps=eps),
+            zshift, zstate, cfg=cfg, ctx=ctx)
+        x = x + y
+        y, _ = rwkv.channel_mix(
+            p["cm"], apply_norm(p["ln2"], x, kind=nk, eps=eps),
+            zshift, cfg=cfg, ctx=ctx)
+        return x + y, aux
+    if kind == "period":
+        b, _, d = x.shape
+        di = cfg.ssm.expand * d
+        for i, sub in enumerate(cfg.block_pattern):
+            sp = p[f"sub{i}"]
+            hpre = apply_norm(sp["norm"], x, kind=nk, eps=eps)
+            if sub == "attn":
+                y = attn.attention_train(sp["attn"], hpre, cfg=cfg, ctx=ctx,
+                                         positions=positions)
+            else:
+                zconv = jnp.zeros((b, cfg.ssm.d_conv - 1, di), x.dtype)
+                zh = jnp.zeros((b, di, cfg.ssm.d_state), jnp.float32)
+                y, _, _ = mam.mamba_train(sp["mamba"], hpre, zconv, zh,
+                                          cfg=cfg, ctx=ctx)
+            x = x + y
+            hpre = apply_norm(sp["mlp_norm"], x, kind=nk, eps=eps)
+            y, aux = _mlp_or_moe(sp, hpre, aux, cfg, ctx)
+            x = x + y
+        return x, aux
+    # std / mla
+    hpre = apply_norm(p["attn_norm"], x, kind=nk, eps=eps)
+    if "mla" in p:
+        y = mla_mod.mla_train(p["mla"], hpre, cfg=cfg, ctx=ctx,
+                              positions=positions)
+    else:
+        y = attn.attention_train(p["attn"], hpre, cfg=cfg, ctx=ctx,
+                                 positions=positions)
+    x = x + y
+    hpre = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+    y, aux = _mlp_or_moe(p, hpre, aux, cfg, ctx)
+    return x + y, aux
+
+
+def forward_hidden(params, embeds, *, cfg: ArchConfig, ctx: ShardCtx,
+                   positions):
+    """embeds: (B,S,d) -> (hidden, aux)."""
+    x = ctx.hint(embeds, ctx.batch, None, None)
+    aux = jnp.zeros((), jnp.float32)
+    for (kind, count), stacked in zip(group_plan(cfg), params["groups"]):
+        blk = jax.checkpoint(partial(_block_train, kind=kind, cfg=cfg,
+                                     ctx=ctx, positions=positions))
+
+        def body(carry, p, _blk=blk):
+            x, a = carry
+            x, a = _blk(p, x, a)
+            return (x, a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stacked)
+    x = apply_norm(params["final_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    return x, aux
+
+
+def embed_tokens(params, tokens, ctx: ShardCtx):
+    x = jnp.take(params["embed"]["emb"], tokens, axis=0)
+    return ctx.hint(x, ctx.batch, None, None)
+
+
+def head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["emb"].T
+    return params["head"]["w"]
+
+
+def make_positions(cfg: ArchConfig, b: int, s: int, offset=0):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)) + offset
+    if cfg.rope_mode == "mrope":
+        return text_mrope_positions(pos)
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _mamba_sub_indices(cfg: ArchConfig) -> list[int]:
+    return [i for i, s in enumerate(cfg.block_pattern) if s == "mamba"]
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> dict:
+    """Zeroed decode cache sized for `max_len` tokens."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    groups = []
+    for kind, n in group_plan(cfg):
+        if kind.startswith("std"):
+            groups.append({
+                "k": jnp.zeros((n, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((n, batch, max_len, kv, hd), dtype)})
+        elif kind.startswith("mla"):
+            m = cfg.mla
+            groups.append({
+                "ckv": jnp.zeros((n, batch, max_len, m.kv_lora_rank), dtype),
+                "kr": jnp.zeros((n, batch, max_len, m.qk_rope_head_dim),
+                                dtype)})
+        elif kind == "rwkv":
+            h = cfg.d_model // cfg.rwkv.head_size
+            hs = cfg.rwkv.head_size
+            groups.append({
+                "S": jnp.zeros((n, batch, h, hs, hs), jnp.float32),
+                "tm": jnp.zeros((n, batch, cfg.d_model), dtype),
+                "cm": jnp.zeros((n, batch, cfg.d_model), dtype)})
+        elif kind == "period":
+            nm = len(_mamba_sub_indices(cfg))
+            di = cfg.ssm.expand * cfg.d_model
+            groups.append({
+                "k": jnp.zeros((n, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((n, batch, max_len, kv, hd), dtype),
+                "h": jnp.zeros((n, nm, batch, di, cfg.ssm.d_state),
+                               jnp.float32),
+                "conv": jnp.zeros((n, nm, batch, cfg.ssm.d_conv - 1, di),
+                                  dtype)})
+        else:
+            raise ValueError(kind)
+    return {"len": jnp.zeros((batch,), jnp.int32), "groups": groups}
+
+
+def _block_prefill(p, x, *, kind: str, cfg: ArchConfig, ctx: ShardCtx,
+                   positions, max_len: int):
+    """Returns (x, cache_entry) matching init_cache leaf layout (minus n)."""
+    nk, eps = cfg.norm, cfg.norm_eps
+    s = x.shape[1]
+    pad = max_len - s
+
+    def padS(a):  # pad the sequence axis (axis=1 after batch) to max_len
+        if pad == 0:
+            return a
+        cfgpad = [(0, 0)] * a.ndim
+        cfgpad[1] = (0, pad)
+        return jnp.pad(a, cfgpad)
+
+    if kind == "rwkv":
+        b, _, d = x.shape
+        h, hs = cfg.d_model // cfg.rwkv.head_size, cfg.rwkv.head_size
+        zshift = jnp.zeros((b, d), x.dtype)
+        zstate = jnp.zeros((b, h, hs, hs), jnp.float32)
+        y, tm_shift, S = rwkv.time_mix_train(
+            p["tm"], apply_norm(p["ln1"], x, kind=nk, eps=eps),
+            zshift, zstate, cfg=cfg, ctx=ctx)
+        x = x + y
+        y, cm_shift = rwkv.channel_mix(
+            p["cm"], apply_norm(p["ln2"], x, kind=nk, eps=eps),
+            zshift, cfg=cfg, ctx=ctx)
+        return x + y, {"S": S, "tm": tm_shift.astype(x.dtype),
+                       "cm": cm_shift.astype(x.dtype)}
+    if kind == "period":
+        b = x.shape[0]
+        di = cfg.ssm.expand * cfg.d_model
+        hs_list, conv_list, kv_entry = [], [], None
+        for i, sub in enumerate(cfg.block_pattern):
+            sp = p[f"sub{i}"]
+            hpre = apply_norm(sp["norm"], x, kind=nk, eps=eps)
+            if sub == "attn":
+                y, (kc, vc) = attn.attention_train(
+                    sp["attn"], hpre, cfg=cfg, ctx=ctx, positions=positions,
+                    return_kv=True)
+                kv_entry = (padS(kc), padS(vc))
+            else:
+                zconv = jnp.zeros((b, cfg.ssm.d_conv - 1, di), x.dtype)
+                zh = jnp.zeros((b, di, cfg.ssm.d_state), jnp.float32)
+                y, conv_s, h_s = mam.mamba_train(sp["mamba"], hpre, zconv, zh,
+                                                 cfg=cfg, ctx=ctx)
+                hs_list.append(h_s)
+                conv_list.append(conv_s)
+            x = x + y
+            hpre = apply_norm(sp["mlp_norm"], x, kind=nk, eps=eps)
+            y, _ = _mlp_or_moe(sp, hpre, jnp.zeros((), jnp.float32), cfg, ctx)
+            x = x + y
+        return x, {"k": kv_entry[0].astype(x.dtype),
+                   "v": kv_entry[1].astype(x.dtype),
+                   "h": jnp.stack(hs_list),
+                   "conv": jnp.stack(conv_list).astype(x.dtype)}
+    hpre = apply_norm(p["attn_norm"], x, kind=nk, eps=eps)
+    if "mla" in p:
+        y, (ckv, kr) = mla_mod.mla_train(p["mla"], hpre, cfg=cfg, ctx=ctx,
+                                         positions=positions,
+                                         return_cache=True)
+        entry = {"ckv": padS(ckv).astype(x.dtype),
+                 "kr": padS(kr).astype(x.dtype)}
+    else:
+        y, (kc, vc) = attn.attention_train(p["attn"], hpre, cfg=cfg, ctx=ctx,
+                                           positions=positions,
+                                           return_kv=True)
+        entry = {"k": padS(kc).astype(x.dtype), "v": padS(vc).astype(x.dtype)}
+    x = x + y
+    hpre = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+    y, _ = _mlp_or_moe(p, hpre, jnp.zeros((), jnp.float32), cfg, ctx)
+    return x + y, entry
+
+
+def _block_decode(p, x, cache, *, kind: str, cfg: ArchConfig, ctx: ShardCtx,
+                  cache_len):
+    nk, eps = cfg.norm, cfg.norm_eps
+    if kind == "rwkv":
+        y, tm_shift, S = rwkv.time_mix_decode(
+            p["tm"], apply_norm(p["ln1"], x, kind=nk, eps=eps),
+            cache["tm"].astype(x.dtype), cache["S"], cfg=cfg, ctx=ctx)
+        x = x + y
+        y, cm_shift = rwkv.channel_mix(
+            p["cm"], apply_norm(p["ln2"], x, kind=nk, eps=eps),
+            cache["cm"].astype(x.dtype), cfg=cfg, ctx=ctx)
+        return x + y, {"S": S, "tm": tm_shift.astype(x.dtype),
+                       "cm": cm_shift.astype(x.dtype)}
+    if kind == "period":
+        midx = 0
+        new_cache = dict(cache)
+        hs_out, conv_out = [], []
+        for i, sub in enumerate(cfg.block_pattern):
+            sp = p[f"sub{i}"]
+            hpre = apply_norm(sp["norm"], x, kind=nk, eps=eps)
+            if sub == "attn":
+                y, nk_c, nv_c = attn.attention_decode(
+                    sp["attn"], hpre, cache["k"], cache["v"], cfg=cfg,
+                    ctx=ctx, cache_len=cache_len)
+                new_cache["k"], new_cache["v"] = nk_c, nv_c
+            else:
+                y, conv_s, h_s = mam.mamba_decode(
+                    sp["mamba"], hpre, cache["conv"][midx].astype(x.dtype),
+                    cache["h"][midx], cfg=cfg, ctx=ctx)
+                hs_out.append(h_s)
+                conv_out.append(conv_s.astype(x.dtype))
+                midx += 1
+            x = x + y
+            hpre = apply_norm(sp["mlp_norm"], x, kind=nk, eps=eps)
+            y, _ = _mlp_or_moe(sp, hpre, jnp.zeros((), jnp.float32), cfg, ctx)
+            x = x + y
+        new_cache["h"] = jnp.stack(hs_out)
+        new_cache["conv"] = jnp.stack(conv_out)
+        return x, new_cache
+    hpre = apply_norm(p["attn_norm"], x, kind=nk, eps=eps)
+    if "mla" in p:
+        y, ckv, kr = mla_mod.mla_decode(
+            p["mla"], hpre, cache["ckv"], cache["kr"], cfg=cfg, ctx=ctx,
+            cache_len=cache_len)
+        entry = {"ckv": ckv, "kr": kr}
+    else:
+        y, kc, vc = attn.attention_decode(
+            p["attn"], hpre, cache["k"], cache["v"], cfg=cfg, ctx=ctx,
+            cache_len=cache_len)
+        entry = {"k": kc, "v": vc}
+    x = x + y
+    hpre = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+    y, _ = _mlp_or_moe(p, hpre, jnp.zeros((), jnp.float32), cfg, ctx)
+    return x + y, entry
+
+
+def lm_prefill(params, batch: dict, *, cfg: ArchConfig, ctx: ShardCtx,
+               max_len: int = 0):
+    """Run the full prompt, return (last-token logits, filled cache)."""
+    if "embeds" in batch:
+        x = ctx.hint(batch["embeds"], ctx.batch, None, None)
+    else:
+        x = embed_tokens(params, batch["tokens"], ctx)
+    b, s = x.shape[0], x.shape[1]
+    max_len = max_len or s
+    positions = make_positions(cfg, b, s)
+    groups_cache = []
+    for (kind, count), stacked in zip(group_plan(cfg), params["groups"]):
+        blk = partial(_block_prefill, kind=kind, cfg=cfg, ctx=ctx,
+                      positions=positions, max_len=max_len)
+
+        def body(x, p, _blk=blk):
+            x, entry = _blk(p, x)
+            return x, entry
+
+        x, entries = jax.lax.scan(body, x, stacked)
+        groups_cache.append(entries)
+    x = apply_norm(params["final_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    logits = (x[:, -1] @ head_weight(params, cfg).astype(x.dtype)
+              ).astype(jnp.float32)
+    cache = {"len": jnp.full((b,), s, jnp.int32), "groups": groups_cache}
+    return logits, cache
+
+
+def lm_decode(params, cache: dict, batch: dict, *, cfg: ArchConfig,
+              ctx: ShardCtx):
+    """One decode step. batch['tokens']: (B,1). Returns (logits, cache)."""
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = embed_tokens(params, batch["tokens"], ctx)
+    cache_len = cache["len"]
+    new_groups = []
+    for (kind, count), stacked, gcache in zip(
+            group_plan(cfg), params["groups"], cache["groups"]):
+        blk = partial(_block_decode, kind=kind, cfg=cfg, ctx=ctx,
+                      cache_len=cache_len)
+
+        def body(x, xs, _blk=blk):
+            p, c = xs
+            x, entry = _blk(p, x, c)
+            return x, entry
+
+        x, entries = jax.lax.scan(body, x, (stacked, gcache))
+        new_groups.append(entries)
+    x = apply_norm(params["final_norm"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    logits = (x[:, -1] @ head_weight(params, cfg).astype(x.dtype)
+              ).astype(jnp.float32)
+    return logits, {"len": cache_len + 1, "groups": new_groups}

@@ -1,0 +1,49 @@
+"""Sequence-chunked vocab-parallel cross-entropy.
+
+Logits are never materialized for the full sequence: the head matmul and
+log-sum-exp run per sequence chunk (peak activation = B×chunk×V instead of
+B×S×V), with the vocab axis TP-sharded — reductions over the sharded vocab
+axis lower to all-reduces under GSPMD.  Labels == -1 are masked out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+
+def chunked_cross_entropy(hidden, head_w, labels, *, ctx: ShardCtx = NULL_CTX,
+                          chunk: int = 512):
+    """hidden: (B,S,d); head_w: (d,V); labels: (B,S) int32 (-1 = pad)."""
+    b, s, d = hidden.shape
+    v = head_w.shape[1]
+    c = min(chunk, s)
+    if s % c:
+        c = s  # fall back to single-shot for odd lengths
+    nc = s // c
+
+    def one_chunk(start):
+        h = jax.lax.dynamic_slice_in_dim(hidden, start, c, axis=1)
+        l = jax.lax.dynamic_slice_in_dim(labels, start, c, axis=1)
+        logits = jnp.einsum("bcd,dv->bcv", h, head_w.astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = ctx.hint(logits, ctx.batch, None,
+                          ctx.tp_if(v) if head_w.ndim == 2 else None)
+        lse = jax.nn.logsumexp(logits, axis=-1)                    # (B,c)
+        mask_v = jnp.arange(v, dtype=jnp.int32)[None, None, :] == \
+            l[..., None]
+        gold = jnp.sum(jnp.where(mask_v, logits, 0.0), axis=-1)    # (B,c)
+        valid = l >= 0
+        ce = jnp.where(valid, lse - gold, 0.0)
+        return ce.sum(), valid.sum()
+
+    def body(carry, i):
+        tot, cnt = carry
+        ls, n = one_chunk(i * c)
+        return (tot + ls, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        jnp.arange(nc))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)

@@ -1,0 +1,228 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+`input_specs()` supplies precomputed mel-frame embeddings (B, Senc, d) —
+the conv1d frontend is a stub per the assignment.  The decoder uses a
+learned positional table sized at init (`max_dec_len`), self-attention with
+a KV cache and cross-attention against the encoder output.  Embeddings are
+tied (logits = h @ emb.T).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import attention as attn
+from repro.models.layers.common import apply_norm, init_norm, \
+    sinusoidal_embedding
+from repro.models.layers.ffn import apply_ffn, init_ffn
+from repro.models.lm import VOCAB_PAD
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+
+ENC_LEN = 1500  # 30 s of audio at 50 Hz after the (stubbed) conv frontend
+
+
+def _init_enc_block(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attn.init_attention(ks[0], cfg, dtype),
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "self_attn": attn.init_attention(ks[0], cfg, dtype),
+        "cross_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "cross_attn": attn.init_attention(ks[1], cfg, dtype, cross=True),
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_whisper(key, cfg: ArchConfig, dtype=jnp.float32,
+                 max_dec_len: int = 4096) -> dict:
+    vp = cfg.padded_vocab(VOCAB_PAD)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": {"emb": (0.02 * jax.random.normal(
+            ks[2], (vp, cfg.d_model))).astype(dtype)},
+        "pos_dec": (0.01 * jax.random.normal(
+            ks[3], (max_dec_len, cfg.d_model))).astype(dtype),
+        "enc_blocks": jax.vmap(partial(_init_enc_block, cfg=cfg,
+                                       dtype=dtype))(enc_keys),
+        "enc_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(partial(_init_dec_block, cfg=cfg,
+                                       dtype=dtype))(dec_keys),
+        "dec_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, frames, *, cfg: ArchConfig, ctx: ShardCtx):
+    """frames: (B, Senc, d) precomputed embeddings -> (B, Senc, d)."""
+    b, s, d = frames.shape
+    x = frames + sinusoidal_embedding(s, d, frames.dtype)[None]
+    x = ctx.hint(x, ctx.batch, None, None)
+    nk, eps = cfg.norm, cfg.norm_eps
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    @jax.checkpoint
+    def block(p, x):
+        h = apply_norm(p["attn_norm"], x, kind=nk, eps=eps)
+        x = x + attn.attention_train(p["attn"], h, cfg=cfg, ctx=ctx,
+                                     positions=positions, causal=False)
+        h = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+        x = x + apply_ffn(p["mlp"], h, act=cfg.act, ctx=ctx)
+        return x
+
+    def body(x, p):
+        return block(p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, kind=nk, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder — train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _dec_embed(params, tokens, offset, ctx):
+    x = jnp.take(params["embed"]["emb"], tokens, axis=0)
+    s = tokens.shape[1]
+    pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], offset, s, axis=0)
+    return ctx.hint(x + pos[None].astype(x.dtype), ctx.batch, None, None)
+
+
+def decoder_train(params, tokens, enc_out, *, cfg: ArchConfig,
+                  ctx: ShardCtx):
+    """tokens: (B, Sd) -> hidden (B, Sd, d)."""
+    b, s = tokens.shape
+    x = _dec_embed(params, tokens, 0, ctx)
+    nk, eps = cfg.norm, cfg.norm_eps
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def block(p, x):
+        h = apply_norm(p["self_norm"], x, kind=nk, eps=eps)
+        x = x + attn.attention_train(p["self_attn"], h, cfg=cfg, ctx=ctx,
+                                     positions=positions, causal=True)
+        h = apply_norm(p["cross_norm"], x, kind=nk, eps=eps)
+        x = x + attn.cross_attention_train(p["cross_attn"], h, enc_out,
+                                           cfg=cfg, ctx=ctx)
+        h = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+        x = x + apply_ffn(p["mlp"], h, act=cfg.act, ctx=ctx)
+        return x
+
+    blk = jax.checkpoint(block)
+
+    def body(x, p):
+        return blk(p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return apply_norm(params["dec_norm"], x, kind=nk, eps=eps)
+
+
+def init_whisper_cache(cfg: ArchConfig, batch: int, max_len: int,
+                       dtype=jnp.float32) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    n = cfg.n_layers
+    return {
+        "len": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros((n, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((n, batch, max_len, kv, hd), dtype),
+        "ck": jnp.zeros((n, batch, ENC_LEN, kv, hd), dtype),
+        "cv": jnp.zeros((n, batch, ENC_LEN, kv, hd), dtype),
+    }
+
+
+def whisper_prefill(params, batch, *, cfg: ArchConfig, ctx: ShardCtx,
+                    max_len: int = 0):
+    """batch: {'frames': (B,Senc,d), 'tokens': (B,Sd)}.
+    Returns (last logits, cache)."""
+    enc_out = encode(params, batch["frames"], cfg=cfg, ctx=ctx)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = _dec_embed(params, tokens, 0, ctx)
+    nk, eps = cfg.norm, cfg.norm_eps
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    pad = max_len - s
+
+    def padS(a):
+        if pad == 0:
+            return a
+        cfgpad = [(0, 0)] * a.ndim
+        cfgpad[1] = (0, pad)
+        return jnp.pad(a, cfgpad)
+
+    def body(x, p):
+        h = apply_norm(p["self_norm"], x, kind=nk, eps=eps)
+        y, (kc, vc) = attn.attention_train(p["self_attn"], h, cfg=cfg,
+                                           ctx=ctx, positions=positions,
+                                           causal=True, return_kv=True)
+        x = x + y
+        h = apply_norm(p["cross_norm"], x, kind=nk, eps=eps)
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p["cross_attn"]["wk"].astype(x.dtype))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p["cross_attn"]["wv"].astype(x.dtype))
+        x = x + attn.cross_attention_decode(p["cross_attn"], h, ck, cv,
+                                            cfg=cfg, ctx=ctx)
+        h = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+        x = x + apply_ffn(p["mlp"], h, act=cfg.act, ctx=ctx)
+        return x, {"k": padS(kc).astype(x.dtype),
+                   "v": padS(vc).astype(x.dtype),
+                   "ck": ck.astype(x.dtype), "cv": cv.astype(x.dtype)}
+
+    x, entries = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(params["dec_norm"], x, kind=nk, eps=eps)
+    logits = (x[:, -1] @ params["embed"]["emb"].T.astype(x.dtype)
+              ).astype(jnp.float32)
+    cache = {"len": jnp.full((b,), s, jnp.int32), **entries}
+    return logits, cache
+
+
+def whisper_decode(params, cache, batch, *, cfg: ArchConfig, ctx: ShardCtx):
+    """One decode step. batch['tokens']: (B,1)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    cache_len = cache["len"]
+    x = jnp.take(params["embed"]["emb"], tokens, axis=0)
+    pos = jnp.take(params["pos_dec"], cache_len, axis=0)[:, None]
+    x = ctx.hint(x + pos.astype(x.dtype), ctx.batch, None, None)
+    nk, eps = cfg.norm, cfg.norm_eps
+
+    def body(x, xs):
+        p, ck_, cv_, kc, vc = xs
+        h = apply_norm(p["self_norm"], x, kind=nk, eps=eps)
+        y, nkc, nvc = attn.attention_decode(p["self_attn"], h, kc, vc,
+                                            cfg=cfg, ctx=ctx,
+                                            cache_len=cache_len)
+        x = x + y
+        h = apply_norm(p["cross_norm"], x, kind=nk, eps=eps)
+        x = x + attn.cross_attention_decode(p["cross_attn"], h, ck_, cv_,
+                                            cfg=cfg, ctx=ctx)
+        h = apply_norm(p["mlp_norm"], x, kind=nk, eps=eps)
+        x = x + apply_ffn(p["mlp"], h, act=cfg.act, ctx=ctx)
+        return x, (nkc, nvc)
+
+    x, (nk_all, nv_all) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["ck"], cache["cv"],
+                  cache["k"], cache["v"]))
+    x = apply_norm(params["dec_norm"], x, kind=nk, eps=eps)
+    logits = (x[:, -1] @ params["embed"]["emb"].T.astype(x.dtype)
+              ).astype(jnp.float32)
+    new_cache = {"len": cache_len + 1, "k": nk_all, "v": nv_all,
+                 "ck": cache["ck"], "cv": cache["cv"]}
+    return logits, new_cache

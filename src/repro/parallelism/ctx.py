@@ -1,0 +1,90 @@
+"""Sharding context threaded through model code.
+
+Model code is written once, globally; ``ShardCtx`` carries the mesh axis
+names so layers can drop ``with_sharding_constraint`` hints.  With no mesh
+(CPU smoke tests) every hint is a no-op.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import reduce
+from operator import mul
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Optional[Mesh]
+    batch_axes: tuple = ()          # ('pod', 'data') / ('data',) / ()
+    tp_axis: Optional[str] = None   # 'model'
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return reduce(mul, (self.mesh.shape[a] for a in self.batch_axes), 1)
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    # ---- axis helpers ------------------------------------------------------
+    def tp_if(self, n: int):
+        """'model' if the tp axis evenly divides n, else replicated."""
+        if self.tp_axis is not None and n % self.tp_size == 0 and self.tp_size > 1:
+            return self.tp_axis
+        return None
+
+    def dp_if(self, n: int):
+        if self.batch_axes and n % self.dp_size == 0:
+            return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        return None
+
+    def ep_axes(self, n_experts: int, d_ff: int):
+        """Expert-parallel placement: (expert_axis, ff_axis).
+
+        Preference order:
+          1. experts over dp, ff over tp    -> 2-D expert sharding.  The
+             token->expert reshard stays within the data axes (a sharding
+             transpose SPMD lowers to an all-to-all); sharding experts over
+             (data×model) combined instead hits SPMD's "involuntary full
+             rematerialization" path (b/433785288) and replicates the
+             dispatch buffer.
+          2. experts over (dp+tp) combined  -> fully sharded experts
+          3. experts over tp                -> classic EP
+          4. replicated
+        """
+        dp, tp = self.dp_size, self.tp_size
+        if self.mesh is None:
+            return None, None
+        all_axes = tuple(self.batch_axes) + ((self.tp_axis,) if self.tp_axis else ())
+        if dp > 1 and n_experts % dp == 0 and self.tp_axis and d_ff % tp == 0:
+            ba = self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+            return ba, self.tp_axis
+        if dp * tp > 1 and n_experts % (dp * tp) == 0:
+            return all_axes, None
+        if self.tp_axis and n_experts % tp == 0:
+            return self.tp_axis, None
+        return None, None
+
+    # ---- constraint hint ---------------------------------------------------
+    def hint(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def batch(self):
+        """Spec entry for a batch-sharded leading dim."""
+        if not self.batch_axes:
+            return None
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+
+NULL_CTX = ShardCtx(mesh=None)

@@ -1,0 +1,226 @@
+"""Path-based PartitionSpec rules for every parameter / batch / cache leaf.
+
+The rules implement:
+  TP   — Megatron column/row splits; head-axis TP when n_heads % tp == 0,
+         head_dim TP otherwise (block-local RoPE makes this legal).
+  EP   — expert placement via ShardCtx.ep_axes (full / 2-D / tp-only).
+  DP   — batch leading axes over ('pod','data').
+  SP   — decode caches shard the *sequence* axis over the data axes when the
+         batch axis is too small (long_500k, global_batch=1).
+  ZeRO-1 — optimizer moments additionally sharded over the data axes.
+
+Every leaf must match a rule: unmatched leaves raise, and a test asserts
+full coverage over all ten architectures.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import ArchConfig
+from repro.models.layers.attention import head_axes
+from repro.parallelism.ctx import ShardCtx
+
+_NORM_PARENTS = {"attn_norm", "mlp_norm", "final_norm", "ln1", "ln2", "norm",
+                 "q_norm", "kv_norm", "self_norm", "cross_norm", "enc_norm",
+                 "dec_norm"}
+_FFN_PARENTS = {"mlp", "shared", "dense"}
+_ATTN_PARENTS = {"attn", "self_attn", "cross_attn"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            names.append(f"[{k.idx}]")
+    return names
+
+
+def _param_rule(names: list[str], shape, cfg: ArchConfig, ctx: ShardCtx):
+    """Spec for the *trailing* dims; caller pads leading stacked dims."""
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    tp = ctx.tp_if
+    hd = cfg.resolved_head_dim
+    h_ax, hd_ax = head_axes(ctx, cfg.n_heads, hd)
+    kv_h_ax = h_ax if (h_ax and cfg.n_kv_heads % ctx.tp_size == 0) else None
+
+    if parent in _NORM_PARENTS or name in ("scale", "bias"):
+        return (None,) * 1 if len(shape) >= 1 else ()
+    if parent == "embed" and name == "emb":
+        return (None, tp(cfg.d_model))
+    if parent == "head" and name == "w":
+        return (None, tp(cfg.padded_vocab(32)))
+    if name == "pos_dec":
+        return (None, None)
+    if parent in _ATTN_PARENTS:
+        return {
+            "wq": (None, h_ax, hd_ax),
+            "wk": (None, kv_h_ax, hd_ax),
+            "wv": (None, kv_h_ax, hd_ax),
+            "wo": (h_ax, hd_ax, None),
+            "bq": (h_ax, hd_ax),
+            "bk": (kv_h_ax, hd_ax),
+            "bv": (kv_h_ax, hd_ax),
+        }[name]
+    if parent == "mla":
+        th = tp(cfg.n_heads)
+        return {
+            "wdq": (None, None), "wdkv": (None, None),
+            "wuq": (None, th, None), "wuk": (None, th, None),
+            "wuv": (None, th, None), "wo": (th, None, None),
+        }[name]
+    if parent == "moe":
+        ep_ax, ff_ax = ctx.ep_axes(cfg.moe.n_experts, cfg.moe.d_ff_expert)
+        return {
+            "router": (None, None),
+            "wi_gate": (ep_ax, None, ff_ax),
+            "wi_up": (ep_ax, None, ff_ax),
+            "wo": (ep_ax, ff_ax, None),
+        }[name]
+    if parent in _FFN_PARENTS:
+        if name in ("wi_gate", "wi_up", "wi"):
+            return (None, tp(shape[-1]))
+        if name == "wo":
+            return (tp(shape[-2]), None)
+    if parent == "tm":
+        d = cfg.d_model
+        return {
+            "wr": (None, tp(d)), "wk": (None, tp(d)), "wv": (None, tp(d)),
+            "wg": (None, tp(d)), "wo": (tp(d), None),
+            "wd1": (None, None), "wd2": (None, tp(d)),
+            "w0": (tp(d),), "u": (tp(d),),
+            "gn_scale": (tp(d),), "gn_bias": (tp(d),),
+            "mu_x": (None,), "mu": (None, None),
+            "mix_w1": (None, None), "mix_w2": (None, None, None),
+        }[name]
+    if parent == "cm":
+        return {
+            "wk": (None, tp(cfg.d_ff)), "wv": (tp(cfg.d_ff), None),
+            "wr": (None, None), "mu_k": (None,), "mu_r": (None,),
+        }[name]
+    if parent == "mamba":
+        di = cfg.ssm.expand * cfg.d_model
+        return {
+            "wx": (None, tp(di)), "wz": (None, tp(di)),
+            "conv_w": (None, tp(di)), "conv_b": (tp(di),),
+            "wxp": (tp(di), None), "wdt": (None, tp(di)),
+            "dt_bias": (tp(di),), "A_log": (tp(di), None),
+            "D": (tp(di),), "wo": (tp(di), None),
+        }[name]
+    raise KeyError(f"no sharding rule for param path {'/'.join(names)} "
+                   f"shape={tuple(shape)}")
+
+
+def _pad(rule: tuple, ndim: int) -> P:
+    if len(rule) > ndim:
+        # scalar-ish leaves (e.g. 1-element rule on 0-d) — replicate
+        rule = rule[-ndim:] if ndim else ()
+    return P(*((None,) * (ndim - len(rule)) + tuple(rule)))
+
+
+def param_pspecs(params, cfg: ArchConfig, ctx: ShardCtx):
+    def leaf(path, x):
+        names = _path_names(path)
+        return _pad(_param_rule(names, x.shape, cfg, ctx), len(x.shape))
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# batches / caches / logits
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch, ctx: ShardCtx):
+    def leaf(x):
+        b = x.shape[0]
+        # DP on the leading (batch) dim, everything else replicated
+        return P(ctx.dp_if(b), *((None,) * (len(x.shape) - 1)))
+    return jax.tree_util.tree_map(leaf, batch)
+
+
+def cache_pspecs(cache, cfg: ArchConfig, ctx: ShardCtx):
+    hd = cfg.resolved_head_dim
+    h_ax, hd_ax = head_axes(ctx, cfg.n_heads, hd)
+    kv_h_ax = h_ax if (h_ax and cfg.n_kv_heads % ctx.tp_size == 0) else None
+
+    def seq_entry(b, s, model_used: bool):
+        """(B_ax, S_ax).  Batch over data; the sequence axis picks up every
+        mesh axis not already used (model, or data+model when B=1) so the
+        cache — the dominant decode state — is maximally sharded."""
+        b_ax = ctx.dp_if(b)
+        if b_ax is not None:
+            s_ax = None if model_used else ctx.tp_if(s)
+            return b_ax, s_ax
+        # tiny batch (long_500k): shard the sequence instead
+        if not model_used and ctx.batch_axes and ctx.tp_axis and \
+                s % (ctx.dp_size * ctx.tp_size) == 0:
+            return None, tuple(ctx.batch_axes) + (ctx.tp_axis,)
+        return None, ctx.dp_if(s)
+
+    def leaf(path, x):
+        names = _path_names(path)
+        name = names[-1]
+        sh = x.shape
+        if name == "len":
+            return P(None)
+        if name in ("k", "v", "ck", "cv"):
+            n, b, s = sh[0], sh[1], sh[2]
+            model_used = (kv_h_ax is not None) or (hd_ax is not None)
+            b_ax, s_ax = seq_entry(b, s, model_used)
+            return P(None, b_ax, s_ax, kv_h_ax, hd_ax)
+        if name in ("ckv", "kr"):
+            b_ax, s_ax = seq_entry(sh[1], sh[2], False)
+            return P(None, b_ax, s_ax, None)
+        if name == "S":      # rwkv state (n,B,H,hs,hs)
+            return P(None, ctx.dp_if(sh[1]), ctx.tp_if(sh[2]), None, None)
+        if name in ("tm", "cm"):
+            return P(None, ctx.dp_if(sh[1]), None)
+        if name == "h":      # mamba (n,nm,B,di,ds)
+            return P(None, None, ctx.dp_if(sh[2]), ctx.tp_if(sh[3]), None)
+        if name == "conv":   # (n,nm,B,K-1,di)
+            return P(None, None, ctx.dp_if(sh[2]), None, ctx.tp_if(sh[4]))
+        raise KeyError(f"no cache rule for {'/'.join(names)}")
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def logits_pspec(cfg: ArchConfig, ctx: ShardCtx, batch: int):
+    return P(ctx.dp_if(batch), ctx.tp_if(cfg.padded_vocab(32)))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: moments additionally sharded over the data axes
+# ---------------------------------------------------------------------------
+
+def zero1_pspec(spec: P, shape, ctx: ShardCtx):
+    if not ctx.batch_axes:
+        return spec
+    used = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    if any(a in used for a in ctx.batch_axes):
+        return spec
+    dp = ctx.dp_size
+    entries = list(spec)
+    for i, (entry, dim) in enumerate(zip(entries, shape)):
+        if entry is None and dim % dp == 0 and dim >= dp:
+            entries[i] = (ctx.batch_axes if len(ctx.batch_axes) > 1
+                          else ctx.batch_axes[0])
+            return P(*entries)
+    return spec
+
+
+def moments_pspecs(param_specs, params, ctx: ShardCtx):
+    return jax.tree_util.tree_map(
+        lambda s, x: zero1_pspec(s, x.shape, ctx), param_specs, params)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

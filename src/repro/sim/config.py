@@ -1,0 +1,77 @@
+"""GPU timing-model configuration (Accel-sim's role, TPU-native rewrite).
+
+Default parameters model the paper's NVIDIA RTX 3080 Ti (Table 1):
+80 SMs × 48 warps, 4 sub-cores/SM, 128 KB L1/SM, 6 MB L2 over 24 memory
+partitions (48 slices), 24 DRAM channels.
+
+Timing abstraction (documented deviations from Accel-sim in DESIGN.md):
+  · warp-level issue model (GTO/LRR) with per-sub-core unit dispatch ports
+  · L1 per SM (set-assoc, LRU), L2 slices + DRAM channels with queueing
+    modeled by exact max-plus recurrences (deterministic)
+  · the machine operates on a ``quantum`` of Δ=16 cycles: the memory system
+    processes its event horizon once per quantum and CTA dispatch happens at
+    quantum boundaries.  Δ ≤ every SM↔memory latency, so SM shards can run a
+    full quantum locally — this is what makes the parallelization exact
+    (DESIGN.md §2, "communication window").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# instruction classes (BAR = CTA-level barrier, __syncthreads)
+FP32, INT32, SFU, TENSOR, LDG, STG, BAR = range(7)
+N_CLASSES = 7
+# execution units (per sub-core dispatch ports)
+U_FP32, U_INT, U_SFU, U_TENSOR, U_LSU = range(5)
+N_UNITS = 5
+
+UNIT_OF_CLASS = (U_FP32, U_INT, U_SFU, U_TENSOR, U_LSU, U_LSU, U_INT)
+# result latency per class (LDG latency is cache-dependent)
+LATENCY_OF_CLASS = (4, 4, 16, 8, 0, 0, 1)
+# dispatch interval (cycles the port stays busy per issue)
+DISPATCH_OF_CLASS = (1, 1, 4, 2, 1, 1, 1)
+
+
+@dataclass(frozen=True)
+class GPUConfig:
+    # table 1
+    n_sm: int = 80
+    warps_per_sm: int = 48
+    n_subcores: int = 4
+    max_cta_per_sm: int = 16
+    # L1: 128 KB / 128 B lines = 1024 lines
+    l1_sets: int = 128
+    l1_ways: int = 8
+    l1_hit_lat: int = 32
+    # L2: 6 MB / 48 slices / 128 B = 1024 lines per slice
+    l2_slices: int = 48
+    l2_sets: int = 128
+    l2_ways: int = 8
+    l2_lat: int = 32
+    # memory partitions / DRAM
+    dram_channels: int = 24
+    part_lat: int = 8
+    dram_burst: int = 4
+    dram_row_penalty: int = 24
+    dram_row_div: int = 64       # blocks per DRAM row
+    # interconnect
+    icnt_lat: int = 16
+    # machine quantum (Δ): must be ≤ icnt_lat
+    quantum: int = 16
+    # misc
+    mshr_per_sm: int = 32
+    addrset_cap: int = 2048      # per-SM unique-address stat set
+    scheduler: str = "gto"       # gto | lrr
+    mem_blocks: int = 1 << 22    # simulated VRAM in 128 B blocks
+
+    def __post_init__(self):
+        assert self.quantum <= self.icnt_lat
+        assert self.warps_per_sm % self.n_subcores == 0
+
+
+RTX3080TI = GPUConfig()
+
+# a small config for fast tests
+TINY = GPUConfig(n_sm=8, warps_per_sm=8, n_subcores=2, l1_sets=16, l1_ways=4,
+                 l2_slices=4, l2_sets=16, l2_ways=4, dram_channels=2,
+                 mshr_per_sm=8, addrset_cap=256)

@@ -1,0 +1,71 @@
+"""CTA (thread-block) dispatch — Algorithm 1's ``issueBlocksToSMs``.
+
+Runs at quantum boundaries in the serial region (replicated under sharding).
+Blocks are dealt round-robin over SMs starting from a rotating pointer,
+matching the paper's description of Accel-sim's distribution; warp slots are
+filled lowest-index-first.  Fully vectorized and deterministic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cta_issue(warp: dict, ctrl: dict, stats: dict, trace: dict, cfg):
+    ns, w = warp["active"].shape
+    n_instr = trace["n_instr"]
+    wpc = trace["warps_per_cta"]
+
+    # free slots of warps that finished (pc done, no outstanding loads)
+    finished = warp["active"] & (warp["pc"] >= n_instr) & \
+        (warp["pending"] == 0)
+    active = warp["active"] & ~finished
+
+    free = ~active
+    free_cnt = jnp.sum(free, axis=1).astype(jnp.int32)
+    cap = jnp.minimum(free_cnt // wpc, cfg.max_cta_per_sm)
+
+    # BREADTH-FIRST round-robin over ORIGINAL SM ids starting at rr
+    # (Accel-sim semantics, paper §4.2: "CTAs are distributed in a
+    # round-robin fashion among the GPU SMs") — one CTA per SM per round.
+    pos = (ctrl["sm_ids"] - ctrl["rr"]) % ns
+    perm = jnp.argsort(pos)                       # sm positions in deal order
+    remaining = jnp.maximum(trace["n_ctas"] - ctrl["next_cta"], 0)
+
+    maxc = int(cfg.max_cta_per_sm)
+    cta_grid = jnp.full((ns, maxc), -1, jnp.int32)
+    assigned = jnp.zeros((), jnp.int32)
+    for r in range(maxc):
+        elig = cap > r
+        elig_ord = elig[perm]
+        rank_ord = jnp.cumsum(elig_ord).astype(jnp.int32) - 1
+        rank = jnp.zeros((ns,), jnp.int32).at[perm].set(rank_ord)
+        take_r = elig & (rank < remaining - assigned)
+        cta_grid = cta_grid.at[:, r].set(
+            jnp.where(take_r, ctrl["next_cta"] + assigned + rank, -1))
+        assigned = assigned + jnp.sum(take_r, dtype=jnp.int32)
+    alloc = jnp.sum(cta_grid >= 0, axis=1).astype(jnp.int32)
+
+    new_warps = alloc * wpc                            # per sm
+    slot_rank = jnp.cumsum(free, axis=1).astype(jnp.int32) - 1
+    take = free & (slot_rank < new_warps[:, None])
+    cta_of_slot = jnp.take_along_axis(
+        cta_grid, jnp.clip(slot_rank // wpc, 0, maxc - 1), axis=1)
+
+    t0 = ctrl["cycle"]
+    warp = dict(
+        warp,
+        active=active | take,
+        pc=jnp.where(take, 0, warp["pc"]),
+        ready_at=jnp.where(take, t0, warp["ready_at"]),
+        pending=jnp.where(take, 0, warp["pending"]),
+        wait_mem=jnp.where(take, False, warp["wait_mem"]),
+        wait_bar=jnp.where(take, False, warp["wait_bar"]),
+        cta=jnp.where(take, cta_of_slot, warp["cta"]),
+        wic=jnp.where(take, slot_rank % wpc, warp["wic"]),
+    )
+    issued = assigned
+    ctrl = dict(ctrl,
+                next_cta=ctrl["next_cta"] + issued,
+                rr=(ctrl["rr"] + 1) % ns)
+    stats = dict(stats, ctas_launched=stats["ctas_launched"] + issued)
+    return warp, ctrl, stats

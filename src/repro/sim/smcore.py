@@ -1,0 +1,218 @@
+"""SM phase — the parallel region (>93% of Accel-sim's runtime, Fig. 4).
+
+``sm_quantum_single`` simulates ONE SM for Δ cycles touching only that SM's
+state slice (warps, L1, its MSHR rows, its stats) — zero cross-SM data flow.
+core/parallel.py runs it vectorized (vmap), serialized (lax.map — the
+single-thread reference), or sharded (shard_map over the 'sm' mesh axis).
+
+Per cycle, per sub-core: deliver resolved memory responses, pick an issuable
+warp (GTO: greedy-then-oldest; or LRR), look up L1 on memory ops (miss ⇒
+allocate an MSHR row that the memory phase will service next quantum),
+update the scoreboard-lite dependency state and the per-SM stats.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.config import (BAR, DISPATCH_OF_CLASS, GPUConfig,
+                              LATENCY_OF_CLASS, LDG, N_UNITS, STG,
+                              UNIT_OF_CLASS)
+from repro.sim.trace import gen_address
+
+BIG = jnp.int32(1 << 30)
+
+
+def _deliver(warp, req, t):
+    """Deliver resolved responses for this SM. req fields: (M,)."""
+    done = (req["stage"] == 3) & (req["t"] <= t)
+    dec = jnp.zeros_like(warp["pending"]).at[req["warp"]].add(
+        jnp.where(done & ~req["is_store"], 1, 0))
+    warp = dict(warp, pending=warp["pending"] - dec)
+    req = dict(req, stage=jnp.where(done, 0, req["stage"]))
+    return warp, req
+
+
+def _release_barriers(warp, n_instr, t):
+    """CTA barrier: a waiting warp resumes once every active warp of its
+    CTA has either arrived at the barrier or finished the kernel (uniform
+    control flow — all warps execute the same trace).  Pairwise over the
+    warp slots of one SM: O(W²) booleans, entirely SM-local."""
+    cta = warp["cta"]
+    active = warp["active"]
+    arrived = warp["wait_bar"] | (warp["pc"] >= n_instr)
+    same = active[None, :] & (cta[:, None] == cta[None, :])   # (W, W)
+    n_same = jnp.sum(same, axis=1)
+    n_arr = jnp.sum(same & arrived[None, :], axis=1)
+    release = warp["wait_bar"] & (n_arr == n_same)
+    return dict(warp,
+                wait_bar=jnp.where(release, False, warp["wait_bar"]),
+                ready_at=jnp.where(release, t, warp["ready_at"]))
+
+
+def _l1_access(sm, addr, t, cfg: GPUConfig):
+    """One L1 probe for a scalar addr. Returns (hit, sm_state')."""
+    st = (addr % cfg.l1_sets).astype(jnp.int32)
+    ways = sm["l1_tag"][st]                       # (ways,)
+    hit = jnp.any(ways == addr)
+    hway = jnp.argmax(ways == addr)
+    victim = jnp.argmin(sm["l1_lru"][st])
+    way = jnp.where(hit, hway, victim)
+    l1_tag = sm["l1_tag"].at[st, way].set(
+        jnp.where(hit, sm["l1_tag"][st, way], addr))
+    l1_lru = sm["l1_lru"].at[st, way].set(t)
+    return hit, dict(sm, l1_tag=l1_tag, l1_lru=l1_lru)
+
+
+def _addrset_insert(sm, addr, enable, cfg: GPUConfig):
+    """Bounded open-addressing set insert (the paper's set-valued stat,
+    'per-SM instance + terminal union' strategy)."""
+    cap = cfg.addrset_cap
+    aset = sm["addrset"]
+    idx = (addr.astype(jnp.uint32) * jnp.uint32(2654435761)
+           % jnp.uint32(cap)).astype(jnp.int32)
+    inserted = ~enable            # nothing to do when disabled
+    over = jnp.zeros((), jnp.int32)
+    for probe in range(4):
+        slot = (idx + probe) % cap
+        cur = aset[slot]
+        can = (~inserted) & ((cur == addr) | (cur == -1))
+        aset = aset.at[slot].set(jnp.where(can & (cur == -1), addr, cur))
+        inserted = inserted | can
+    over = jnp.where(~inserted, 1, 0)
+    return dict(sm, addrset=aset,
+                addrset_over=sm["addrset_over"] + over)
+
+
+def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: GPUConfig):
+    """Issue at most one instruction on sub-core `sc` (single SM view)."""
+    nsc = cfg.n_subcores
+    w_ids = jnp.arange(sc, cfg.warps_per_sm, nsc, dtype=jnp.int32)
+    pc = warp["pc"][w_ids]
+    active = warp["active"][w_ids]
+    n_instr = trace["n_instr"]
+    exists = active & (pc < n_instr)
+    blocked = (warp["wait_mem"][w_ids] & (warp["pending"][w_ids] > 0)) \
+        | warp["wait_bar"][w_ids]
+    ready = exists & ~blocked & (warp["ready_at"][w_ids] <= t)
+
+    pcc = jnp.clip(pc, 0, n_instr - 1)
+    op = trace["ops"][pcc]
+    unit = jnp.asarray(UNIT_OF_CLASS, jnp.int32)[op]
+    ufree = sm["unit_free"][sc][unit] <= t
+    is_mem = (op == LDG) | (op == STG)
+    free_rows = jnp.sum(req["stage"] == 0) > 0
+    cand = ready & ufree & (~is_mem | free_rows)
+
+    # scheduler: GTO (greedy warp first, then oldest) or loose round-robin
+    if cfg.scheduler == "gto":
+        greedy = w_ids == sm["last_issued"][sc]
+        key = jnp.where(cand, jnp.where(greedy, -1, w_ids), BIG)
+    else:  # lrr
+        rot = (w_ids - sm["last_issued"][sc] - 1) % cfg.warps_per_sm
+        key = jnp.where(cand, rot, BIG)
+    sel = jnp.argmin(key)
+    do = cand[sel]
+    wsel = w_ids[sel]                   # global warp slot
+    spc = pcc[sel]
+    sop = op[sel]
+    sunit = unit[sel]
+
+    # ---- memory handling ---------------------------------------------------
+    gwarp = warp["cta"][wsel] * trace["warps_per_cta"] + warp["wic"][wsel]
+    addr = gen_address(trace["addr_mode"][spc], trace["addr_param"][spc],
+                       gwarp, spc, cfg.mem_blocks)
+    mem_issue = do & (sop == LDG) | (do & (sop == STG))
+    hit, sm_new = _l1_access(sm, addr, t, cfg)
+    sm = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(mem_issue, b, a), sm, sm_new)
+    sm = _addrset_insert(sm, addr, mem_issue, cfg)
+    l1_hit = mem_issue & hit
+    l1_miss = mem_issue & ~hit
+
+    # MSHR allocation on miss
+    row = jnp.argmin(jnp.where(req["stage"] == 0, 0, 1))
+    alloc = l1_miss
+    req = dict(
+        req,
+        stage=req["stage"].at[row].set(
+            jnp.where(alloc, 1, req["stage"][row])),
+        addr=req["addr"].at[row].set(
+            jnp.where(alloc, addr, req["addr"][row])),
+        t=req["t"].at[row].set(
+            jnp.where(alloc, t + cfg.icnt_lat, req["t"][row])),
+        warp=req["warp"].at[row].set(
+            jnp.where(alloc, wsel, req["warp"][row])),
+        is_store=req["is_store"].at[row].set(
+            jnp.where(alloc, sop == STG, req["is_store"][row])),
+    )
+
+    # ---- dependency / latency ----------------------------------------------
+    lat = jnp.asarray(LATENCY_OF_CLASS, jnp.int32)[sop]
+    lat = jnp.where(sop == LDG, jnp.where(hit, cfg.l1_hit_lat, 1), lat)
+    dep_next = jnp.where(spc + 1 < n_instr, trace["dep"][
+        jnp.clip(spc + 1, 0, n_instr - 1)], False)
+    wait_lat = jnp.where(dep_next, jnp.maximum(lat, 1), 1)
+    new_ready = t + wait_lat
+    new_wait = dep_next & l1_miss          # wait on outstanding loads
+    new_pending = warp["pending"][wsel] + jnp.where(
+        l1_miss & (sop == LDG), 1, 0)
+
+    warp = dict(
+        warp,
+        pc=warp["pc"].at[wsel].set(jnp.where(do, spc + 1, warp["pc"][wsel])),
+        ready_at=warp["ready_at"].at[wsel].set(
+            jnp.where(do, new_ready, warp["ready_at"][wsel])),
+        wait_mem=warp["wait_mem"].at[wsel].set(
+            jnp.where(do, new_wait, warp["wait_mem"][wsel])),
+        wait_bar=warp["wait_bar"].at[wsel].set(
+            jnp.where(do & (sop == BAR), True, warp["wait_bar"][wsel])),
+        pending=warp["pending"].at[wsel].set(
+            jnp.where(do, new_pending, warp["pending"][wsel])),
+    )
+    disp = jnp.asarray(DISPATCH_OF_CLASS, jnp.int32)[sop]
+    sm = dict(
+        sm,
+        unit_free=sm["unit_free"].at[sc, sunit].set(
+            jnp.where(do, t + disp, sm["unit_free"][sc, sunit])),
+        last_issued=sm["last_issued"].at[sc].set(
+            jnp.where(do, wsel, sm["last_issued"][sc])),
+    )
+    stats = dict(
+        stats,
+        issued=stats["issued"] + jnp.where(do, 1, 0),
+        issued_mem=stats["issued_mem"] + jnp.where(mem_issue, 1, 0),
+        l1_hit=stats["l1_hit"] + jnp.where(l1_hit, 1, 0),
+        l1_miss=stats["l1_miss"] + jnp.where(l1_miss, 1, 0),
+        stall=stats["stall"] + jnp.where(jnp.any(exists) & ~do, 1, 0),
+    )
+    return warp, sm, req, stats, do
+
+
+def sm_cycle_single(warp, sm, req, stats, trace, t, cfg: GPUConfig):
+    """One cycle of one SM (arrays without the n_sm axis)."""
+    warp, req = _deliver(warp, req, t)
+    warp = _release_barriers(warp, trace["n_instr"], t)
+    issued_any = jnp.zeros((), jnp.bool_)
+    for sc in range(cfg.n_subcores):
+        warp, sm, req, stats, did = _issue_subcore(
+            warp, sm, req, stats, trace, t, sc, cfg)
+        issued_any = issued_any | did
+    stats = dict(
+        stats,
+        cycles_issue=stats["cycles_issue"] + jnp.where(issued_any, 1, 0),
+        warp_cycles=stats["warp_cycles"]
+        + jnp.sum(warp["active"], dtype=jnp.int32),
+    )
+    return warp, sm, req, stats
+
+
+def sm_quantum_single(warp, sm, req, stats, trace, t0, cfg: GPUConfig):
+    """Run Δ consecutive cycles for one SM — the communication window."""
+    def body(i, carry):
+        warp, sm, req, stats = carry
+        return sm_cycle_single(warp, sm, req, stats, trace, t0 + i, cfg)
+
+    return jax.lax.fori_loop(0, cfg.quantum, body, (warp, sm, req, stats))

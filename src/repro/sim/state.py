@@ -1,0 +1,106 @@
+"""Simulator state: struct-of-arrays pytree.
+
+Layout invariant (this IS the paper's parallelization boundary):
+  · arrays with a leading ``n_sm`` axis are touched ONLY by the SM phase
+    (embarrassingly parallel — vmap / lax.map / shard_map over that axis);
+  · ``mem`` / ``ctrl`` and the global stats are touched ONLY by the
+    memory/CTA phases (the serial region, computed replicated);
+  · per-SM statistics are isolated per SM (paper §3) and reduced once at
+    the end of the run (core/stats.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sim.config import GPUConfig, N_UNITS
+
+
+def init_state(cfg: GPUConfig) -> dict:
+    ns, w, m = cfg.n_sm, cfg.warps_per_sm, cfg.mshr_per_sm
+    sc = cfg.n_subcores
+    i32 = jnp.int32
+    return {
+        "warp": {
+            "pc": jnp.zeros((ns, w), i32),
+            "active": jnp.zeros((ns, w), jnp.bool_),
+            "ready_at": jnp.zeros((ns, w), i32),
+            "pending": jnp.zeros((ns, w), i32),
+            "wait_mem": jnp.zeros((ns, w), jnp.bool_),
+            "wait_bar": jnp.zeros((ns, w), jnp.bool_),  # at a CTA barrier
+            "cta": jnp.full((ns, w), -1, i32),
+            "wic": jnp.zeros((ns, w), i32),     # warp index within CTA
+        },
+        "sm": {
+            "last_issued": jnp.full((ns, sc), -1, i32),
+            "unit_free": jnp.zeros((ns, sc, N_UNITS), i32),
+            "l1_tag": jnp.full((ns, cfg.l1_sets, cfg.l1_ways), -1, i32),
+            "l1_lru": jnp.zeros((ns, cfg.l1_sets, cfg.l1_ways), i32),
+            "addrset": jnp.full((ns, cfg.addrset_cap), -1, i32),
+            "addrset_over": jnp.zeros((ns,), i32),
+        },
+        "req": {
+            "stage": jnp.zeros((ns, m), i32),   # 0 free,1 →L2,2 →DRAM,3 done
+            "addr": jnp.zeros((ns, m), i32),
+            "t": jnp.zeros((ns, m), i32),
+            "warp": jnp.zeros((ns, m), i32),
+            "is_store": jnp.zeros((ns, m), jnp.bool_),
+        },
+        "mem": {
+            "l2_tag": jnp.full((cfg.l2_slices, cfg.l2_sets, cfg.l2_ways),
+                               -1, i32),
+            "l2_lru": jnp.zeros((cfg.l2_slices, cfg.l2_sets, cfg.l2_ways),
+                                i32),
+            "l2_busy": jnp.zeros((cfg.l2_slices,), i32),
+            "dram_busy": jnp.zeros((cfg.dram_channels,), i32),
+            "dram_row": jnp.full((cfg.dram_channels,), -1, i32),
+        },
+        "ctrl": {
+            "cycle": jnp.zeros((), i32),
+            "next_cta": jnp.zeros((), i32),
+            "rr": jnp.zeros((), i32),
+            "done_cycle": jnp.full((), -1, i32),
+            # original SM id at each array position (identity unless the
+            # SM axis was relabeled for a device-assignment policy); CTA
+            # round-robin follows ORIGINAL ids so results are invariant.
+            "sm_ids": jnp.arange(ns, dtype=i32),
+        },
+        # --- per-SM stats (parallel region; isolated per SM, reduced at the
+        #     epilogue — the paper's data-race fix) -------------------------
+        "stats_sm": {
+            "issued": jnp.zeros((ns,), i32),
+            "issued_mem": jnp.zeros((ns,), i32),
+            "l1_hit": jnp.zeros((ns,), i32),
+            "l1_miss": jnp.zeros((ns,), i32),
+            "cycles_issue": jnp.zeros((ns,), i32),   # cycles with ≥1 issue
+            "stall": jnp.zeros((ns,), i32),          # active but no issue
+            "warp_cycles": jnp.zeros((ns,), i32),
+        },
+        # --- global stats (serial region; the paper's "option 3") ----------
+        "stats": {
+            "l2_hit": jnp.zeros((), i32),
+            "l2_miss": jnp.zeros((), i32),
+            "dram_req": jnp.zeros((), i32),
+            "dram_row_hit": jnp.zeros((), i32),
+            "ctas_launched": jnp.zeros((), i32),
+        },
+    }
+
+
+def reset_for_kernel(state: dict, cfg: GPUConfig) -> dict:
+    """Between kernels: clear warps/requests, flush L1 (Accel-sim semantics),
+    keep L2/DRAM state and accumulated stats."""
+    s = init_state(cfg)
+    new = {
+        "warp": s["warp"],
+        "sm": dict(state["sm"],
+                   l1_tag=s["sm"]["l1_tag"], l1_lru=s["sm"]["l1_lru"],
+                   last_issued=s["sm"]["last_issued"],
+                   unit_free=jnp.zeros_like(state["sm"]["unit_free"])),
+        "req": s["req"],
+        "mem": dict(state["mem"]),
+        "ctrl": dict(state["ctrl"], next_cta=jnp.zeros((), jnp.int32),
+                     done_cycle=jnp.full((), -1, jnp.int32)),
+        "stats_sm": dict(state["stats_sm"]),
+        "stats": dict(state["stats"]),
+    }
+    return new

@@ -1,0 +1,87 @@
+"""Kernel traces: the simulator's workload representation.
+
+A kernel is a grid of CTAs; every warp executes the same instruction list
+(trace-driven, like Accel-sim's trace mode) with per-warp addresses generated
+procedurally from (cta, warp, pc) — address *patterns* (streaming / strided /
+random) are the workload knobs that matter for cache/DRAM behaviour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.config import FP32, INT32, LDG, SFU, STG, TENSOR  # noqa: F401
+
+# address modes
+A_NONE, A_STREAM, A_STRIDED, A_RANDOM = range(4)
+
+
+@dataclass
+class KernelTrace:
+    name: str
+    n_ctas: int
+    warps_per_cta: int
+    ops: np.ndarray          # (L,) int32 instruction class
+    dep: np.ndarray          # (L,) bool — depends on previous instruction
+    addr_mode: np.ndarray    # (L,) int32
+    addr_param: np.ndarray   # (L,) int32
+
+    @property
+    def n_instr(self) -> int:
+        return len(self.ops)
+
+    def pack(self) -> dict:
+        return {
+            "ops": jnp.asarray(self.ops, jnp.int32),
+            "dep": jnp.asarray(self.dep, jnp.bool_),
+            "addr_mode": jnp.asarray(self.addr_mode, jnp.int32),
+            "addr_param": jnp.asarray(self.addr_param, jnp.int32),
+            "n_ctas": jnp.asarray(self.n_ctas, jnp.int32),
+            "warps_per_cta": jnp.asarray(self.warps_per_cta, jnp.int32),
+            "n_instr": jnp.asarray(self.n_instr, jnp.int32),
+        }
+
+
+@dataclass
+class Workload:
+    name: str
+    kernels: list = field(default_factory=list)
+
+    @property
+    def total_ctas(self) -> int:
+        return sum(k.n_ctas for k in self.kernels)
+
+    def ctas_per_kernel(self) -> list[int]:
+        return [k.n_ctas for k in self.kernels]
+
+
+def build_kernel(name: str, *, n_ctas: int, warps_per_cta: int,
+                 body: list[tuple], repeats: int = 1,
+                 seed: int = 0) -> KernelTrace:
+    """body: list of (op_class, dep, addr_mode, addr_param) tuples."""
+    ops, dep, am, ap = [], [], [], []
+    for _ in range(repeats):
+        for (o, d, m, p) in body:
+            ops.append(o)
+            dep.append(d)
+            am.append(m)
+            ap.append(p)
+    return KernelTrace(
+        name=name, n_ctas=n_ctas, warps_per_cta=warps_per_cta,
+        ops=np.asarray(ops, np.int32), dep=np.asarray(dep, bool),
+        addr_mode=np.asarray(am, np.int32),
+        addr_param=np.asarray(ap, np.int32))
+
+
+def gen_address(mode, param, gwarp, pc, mem_blocks: int):
+    """Vectorized procedural address generator (block addresses)."""
+    stream = (param * 4096 + gwarp * 8 + (pc % 8)) % mem_blocks
+    strided = (param * 4096 + gwarp * 257 + pc * 31) % mem_blocks
+    h = (gwarp.astype(jnp.uint32) * jnp.uint32(2654435761)
+         + (pc * 40503 + param * 97).astype(jnp.uint32))
+    random = (h % jnp.uint32(mem_blocks)).astype(jnp.int32)
+    addr = jnp.where(mode == A_STREAM, stream,
+                     jnp.where(mode == A_STRIDED, strided, random))
+    return addr.astype(jnp.int32)

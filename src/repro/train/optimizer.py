@@ -1,0 +1,91 @@
+"""In-house AdamW with global-norm clipping and warmup+cosine schedule.
+
+Moments may be stored in bf16 ("compressed optimizer state" — used for the
+two ≥400 B-parameter MoE architectures); the update maths always runs in
+fp32.  Moments are ZeRO-1 sharded via parallelism/sharding.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"   # 'float32' | 'bfloat16'
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params, cfg: OptConfig) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay for norms / biases / 1-d params."""
+    name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+    return name not in ("scale", "bias", "mu_x", "mu", "mu_k", "mu_r",
+                        "w0", "u", "gn_scale", "gn_bias", "dt_bias",
+                        "conv_b", "D")
+
+
+def adamw_update(grads, opt, params, cfg: OptConfig, step):
+    """Returns (new_params, new_opt, gnorm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    c1 = 1.0 - cfg.b1 ** (step.astype(jnp.float32) + 1.0)
+    c2 = 1.0 - cfg.b2 ** (step.astype(jnp.float32) + 1.0)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree_util.tree_map_with_path(
+        upd, params, grads, opt["m"], opt["v"])
+    new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v}, gnorm

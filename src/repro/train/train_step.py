@@ -1,0 +1,72 @@
+"""Train-step construction: value_and_grad + AdamW, ShardCtx-aware."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import factory
+from repro.parallelism.ctx import NULL_CTX, ShardCtx
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def init_train_state(key, cfg: ArchConfig, opt_cfg: OptConfig,
+                     dtype=jnp.float32, max_seq: int = 4096) -> dict:
+    params = factory.init_params(key, cfg, dtype, max_seq=max_seq)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
+                    ctx: ShardCtx = NULL_CTX, accum_steps: int = 1):
+    """accum_steps > 1 scans over microbatches (leading-dim split of the
+    global batch) accumulating fp32 grads before one optimizer update —
+    trades step latency for activation memory, the standard lever when the
+    per-device batch would not fit."""
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return factory.train_loss(p, batch, cfg=cfg, ctx=ctx)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grads_of(state["params"], batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, _ = carry
+                (loss, metrics), g = grads_of(state["params"], mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, metrics), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, metrics), _ = jax.lax.scan(
+                body, (zeros, {"loss": jnp.zeros((), jnp.float32),
+                               "ce": jnp.zeros((), jnp.float32),
+                               "aux": jnp.zeros((), jnp.float32)}), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+        new_p, new_opt, gnorm = adamw_update(
+            grads, state["opt"], state["params"], opt_cfg, state["step"])
+        new_state = {"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, ctx: ShardCtx = NULL_CTX):
+    def eval_step(params, batch):
+        loss, metrics = factory.train_loss(params, batch, cfg=cfg, ctx=ctx)
+        return metrics
+    return eval_step

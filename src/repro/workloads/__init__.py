@@ -1,0 +1,4 @@
+from repro.workloads.lm_traces import arch_workload
+from repro.workloads.synthetic import ALL_BENCHMARKS, SUITES, make_workload
+
+__all__ = ["ALL_BENCHMARKS", "SUITES", "make_workload", "arch_workload"]

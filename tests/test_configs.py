@@ -1,0 +1,48 @@
+"""Config registry: published dims, param counts, cell applicability."""
+import pytest
+
+from repro.configs import SHAPES, get_config, get_reduced, list_archs
+
+PUBLISHED_B = {
+    "codeqwen1.5-7b": 7.25, "qwen2-72b": 72.7, "phi3-medium-14b": 14.0,
+    "minitron-8b": 8.0, "rwkv6-1.6b": 1.6, "qwen2-vl-2b": 1.5,
+    "jamba-v0.1-52b": 52.0, "arctic-480b": 480.0,
+    "deepseek-v3-671b": 671.0, "whisper-base": 0.074,
+}
+
+
+def test_ten_archs():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list(PUBLISHED_B))
+def test_param_count_near_published(arch):
+    n = get_config(arch).param_count() / 1e9
+    pub = PUBLISHED_B[arch]
+    assert abs(n - pub) / pub < 0.35, (arch, n, pub)
+
+
+def test_cells_total_40():
+    total = sum(len(get_config(a).cells()) + len(get_config(a).skipped_cells())
+                for a in list_archs())
+    assert total == 40
+
+
+def test_long_context_only_subquadratic():
+    for a in list_archs():
+        cfg = get_config(a)
+        runs_long = any(s.name == "long_500k" for s in cfg.cells())
+        assert runs_long == (cfg.family in ("ssm", "hybrid"))
+
+
+@pytest.mark.parametrize("arch", list(PUBLISHED_B))
+def test_reduced_configs_small(arch):
+    r = get_reduced(arch)
+    assert r.param_count() < 50e6
+    assert r.resolved_head_dim % 8 == 0  # rope block alignment
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["decode_32k"].tokens == 128
+    assert SHAPES["long_500k"].is_decode

@@ -1,0 +1,70 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.sm_issue.kernel import issue_select_pallas
+from repro.kernels.sm_issue.ref import issue_select_ref
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv_ref_stepwise
+from repro.sim.config import N_UNITS
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,hd,bq,bk", [(128, 32, 64, 64), (256, 64, 128, 128),
+                                        (256, 128, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(dtype, s, hd, bq, bk, causal):
+    key = jax.random.PRNGKey(s + hd)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, s, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, s, hd), jnp.float32).astype(dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("s,hs,chunk", [(64, 32, 32), (128, 64, 64),
+                                        (128, 32, 16)])
+def test_wkv6_kernel_sweep(s, hs, chunk):
+    key = jax.random.PRNGKey(s)
+    ks = jax.random.split(key, 5)
+    shp = (2, s, 2, hs)
+    r = jax.random.normal(ks[0], shp) * 0.5
+    k = jax.random.normal(ks[1], shp) * 0.5
+    v = jax.random.normal(ks[2], shp) * 0.5
+    w = -jnp.exp(jax.random.normal(ks[3], shp) - 1)
+    u = 0.3 * jax.random.normal(ks[4], (2, hs))
+    o, st = wkv6_pallas(r, k, v, w, u, chunk=chunk)
+    o_ref, st_ref = wkv_ref_stepwise(r, k, v, w, u,
+                                     jnp.zeros((2, 2, hs, hs)))
+    np.testing.assert_allclose(o, o_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st, st_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_sm_issue_property(seed):
+    rng = np.random.default_rng(seed)
+    n_sm, w, sc, L = 4, 8, 2, 16
+    args = (jnp.asarray(rng.integers(0, L + 2, (n_sm, w)), jnp.int32),
+            jnp.asarray(rng.random((n_sm, w)) < 0.7),
+            jnp.asarray(rng.integers(0, 20, (n_sm, w)), jnp.int32),
+            jnp.asarray(rng.integers(0, 2, (n_sm, w)), jnp.int32),
+            jnp.asarray(rng.random((n_sm, w)) < 0.3),
+            jnp.asarray(rng.integers(-1, w, (n_sm, sc)), jnp.int32),
+            jnp.asarray(rng.integers(0, 15, (n_sm, sc, N_UNITS)), jnp.int32),
+            jnp.asarray(rng.integers(0, 6, (L,)), jnp.int32),
+            jnp.asarray(rng.random((L,)) < 0.5),
+            int(rng.integers(0, 15)))
+    ref = issue_select_ref(*args, n_subcores=sc)
+    got = issue_select_pallas(*args, n_subcores=sc)
+    assert (np.asarray(ref) == np.asarray(got)).all()

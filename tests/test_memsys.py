@@ -1,0 +1,41 @@
+"""Memory-system unit tests: the max-plus queueing recurrence is exact."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.memsys import _lex_sort, _seg_maxplus
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 50),
+                          st.integers(1, 5)), min_size=1, max_size=40))
+def test_seg_maxplus_matches_loop(items):
+    """finish_i = max(arrival_i, finish_{i-1}) + service_i per segment."""
+    items.sort(key=lambda x: x[0])
+    seg = np.array([x[0] for x in items], np.int32)
+    arr = np.array([x[1] for x in items], np.int32)
+    srv = np.array([x[2] for x in items], np.int32)
+    seg_start = np.ones(len(items), bool)
+    seg_start[1:] = seg[1:] != seg[:-1]
+    got = np.asarray(_seg_maxplus(jnp.asarray(seg_start), jnp.asarray(srv),
+                                  jnp.asarray(arr)))
+    finish = {}
+    want = []
+    for s, a, v in items:
+        f = max(a, finish.get(s, 0)) + v
+        finish[s] = f
+        want.append(f)
+    assert (got == np.array(want)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 100)),
+                min_size=1, max_size=30))
+def test_lex_sort(items):
+    p = jnp.asarray([x[0] for x in items], jnp.int32)
+    s = jnp.asarray([x[1] for x in items], jnp.int32)
+    t = jnp.arange(len(items), dtype=jnp.int32)
+    valid = jnp.ones(len(items), bool)
+    order = np.asarray(_lex_sort(p, s, t, valid))
+    keys = [(items[i][0], items[i][1], i) for i in order]
+    assert keys == sorted(keys)

@@ -1,0 +1,77 @@
+"""Sharding-rule coverage: every param/cache leaf of every arch matches a
+rule, specs are valid for the production mesh axes, and ZeRO-1 adds the
+data axis where legal.  Uses a fake mesh (axis sizes only — no devices)."""
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.models import factory
+from repro.parallelism import sharding as shd
+from repro.parallelism.ctx import ShardCtx
+
+
+@dataclass(frozen=True)
+class FakeMesh:
+    shape_dict: dict
+    @property
+    def shape(self):
+        return self.shape_dict
+    @property
+    def axis_names(self):
+        return tuple(self.shape_dict)
+
+
+def make_ctx(multi=False):
+    if multi:
+        mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+        return ShardCtx(mesh=mesh, batch_axes=("pod", "data"),
+                        tp_axis="model")
+    mesh = FakeMesh({"data": 16, "model": 16})
+    return ShardCtx(mesh=mesh, batch_axes=("data",), tp_axis="model")
+
+
+def _check_specs(tree, specs, cfg, ctx):
+    flat_x = jax.tree_util.tree_leaves(tree)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat_x) == len(flat_s)
+    for x, s in zip(flat_x, flat_s):
+        assert len(s) <= len(x.shape)
+        for entry, dim in zip(tuple(s) + (None,) * 8, x.shape):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= ctx.mesh.shape[a]
+            assert dim % size == 0, (x.shape, s)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_rules_cover_all_archs(arch, multi):
+    cfg = get_config(arch)
+    ctx = make_ctx(multi)
+    shapes = jax.eval_shape(
+        lambda: factory.init_params(jax.random.PRNGKey(0), cfg,
+                                    jnp.bfloat16, max_seq=4096))
+    specs = shd.param_pspecs(shapes, cfg, ctx)   # KeyError = missing rule
+    _check_specs(shapes, specs, cfg, ctx)
+    # ZeRO-1 moments stay divisibility-valid too
+    mspecs = shd.moments_pspecs(specs, shapes, ctx)
+    _check_specs(shapes, mspecs, cfg, ctx)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_cache_rules_cover_all_archs(arch):
+    cfg = get_config(arch)
+    ctx = make_ctx()
+    for batch, seqlen in ((128, 1024), (1, 4096)):
+        shapes = jax.eval_shape(
+            lambda: factory.init_cache(cfg, batch, seqlen, jnp.bfloat16))
+        specs = shd.cache_pspecs(shapes, cfg, ctx)
+        _check_specs(shapes, specs, cfg, ctx)

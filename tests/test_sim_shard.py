@@ -1,0 +1,63 @@
+"""Sharded-mode determinism (multi-device) — subprocess because jax locks
+the host device count at first init.  Covers: device counts, static/dynamic
+SM assignment, per-cycle vs windowed exchange."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json, jax, jax.numpy as jnp
+    from functools import partial
+    from repro.sim.config import TINY
+    from repro.core.engine import simulate
+    from repro.core.parallel import (make_sm_runner, run_kernel_sharded,
+                                     sm_permutation, permute_state)
+    from repro.launch.mesh import make_host_mesh
+    from repro.core import stats as S
+    from repro.sim.state import init_state, reset_for_kernel
+    from repro.workloads import make_workload
+
+    cfg = TINY
+    w = make_workload("sssp", scale=0.03)
+    ref = S.comparable(S.finalize(simulate(
+        w, cfg, make_sm_runner(cfg, "vmap"), max_cycles=1<<15)))
+    results = {"ref": ref}
+    for policy in ("static", "dynamic"):
+        for exchange in ("window", "cycle"):
+            mesh = make_host_mesh(4, "sm")
+            perm = sm_permutation(cfg, 4, policy)
+            state = permute_state(init_state(cfg), perm)
+            runner = jax.jit(partial(run_kernel_sharded, cfg=cfg, mesh=mesh,
+                                     max_cycles=1<<15, exchange=exchange))
+            total = jnp.zeros((), jnp.int32)
+            for k in w.kernels:
+                state = reset_for_kernel(state, cfg)
+                state = runner(state, k.pack())
+                kc = jnp.where(state["ctrl"]["done_cycle"] >= 0,
+                               state["ctrl"]["done_cycle"],
+                               state["ctrl"]["cycle"])
+                total = total + kc
+            state["ctrl"]["total_cycles"] = total
+            results[f"{policy}/{exchange}"] = S.comparable(S.finalize(state))
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_identical_to_vmap():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    ref = results.pop("ref")
+    for name, got in results.items():
+        assert got == ref, (name, got, ref)
