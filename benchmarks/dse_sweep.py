@@ -1,0 +1,70 @@
+"""DSE throughput: batched vmap sweep vs a Python loop of solo runs.
+
+The batched path compiles ONE program for N configs (one device dispatch
+per quantum for ALL lanes); the loop path gets the same compilation
+amortization (dyn is a traced argument of one shared jitted solo program —
+the static/dynamic split's other payoff) but pays N sequential device
+programs.  Reports configs/sec for both and the speedup — the DSE analogue
+of the paper's Fig. 5.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
+from repro.core.engine import run_workload
+from repro.core.parallel import make_sm_runner
+from repro.core.sweep import make_sweep_runner, stack_dyn
+from repro.launch.dse import default_grid
+from repro.sim.config import TINY, split_config
+from repro.sim.state import init_state
+from repro.workloads import make_workload
+
+N_CONFIGS = 8
+BENCH = "hotspot"
+
+
+def run() -> list[dict]:
+    w = make_workload(BENCH, scale=SIM_SCALE)
+    cfgs = default_grid(TINY, N_CONFIGS)
+    scfg, dyn_batch = stack_dyn(cfgs)
+    packed = [k.pack() for k in w.kernels]
+    max_cycles = min(MAX_CYCLES, 1 << 15)
+
+    batched = make_sweep_runner(scfg, packed, max_cycles=max_cycles)
+    t_batch = timeit(
+        lambda: jax.block_until_ready(batched(dyn_batch)), warmup=1, iters=3)
+
+    runner = make_sm_runner(scfg, "vmap")
+    solo = jax.jit(lambda dyn: run_workload(
+        init_state(scfg), packed, scfg, dyn, runner, max_cycles))
+    dyns = [split_config(cfg)[1] for cfg in cfgs]
+
+    def loop():
+        outs = [solo(d)["ctrl"]["total_cycles"] for d in dyns]
+        jax.block_until_ready(outs)
+        return outs
+
+    t_loop = timeit(loop, warmup=1, iters=3)
+
+    rows = [{
+        "name": f"dse/batched_x{N_CONFIGS}",
+        "us_per_call": t_batch * 1e6,
+        "derived": f"configs_per_s={N_CONFIGS / t_batch:.2f}",
+    }, {
+        "name": f"dse/loop_x{N_CONFIGS}",
+        "us_per_call": t_loop * 1e6,
+        "derived": (f"configs_per_s={N_CONFIGS / t_loop:.2f} "
+                    f"speedup={t_loop / t_batch:.2f}x"),
+    }]
+    save_json("dse_sweep", {
+        "n_configs": N_CONFIGS, "bench": BENCH, "scale": SIM_SCALE,
+        "max_cycles": max_cycles, "t_batched_s": t_batch, "t_loop_s": t_loop,
+        "speedup": t_loop / t_batch,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

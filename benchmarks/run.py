@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fig6  — static vs dynamic scheduler                       (paper Fig. 6)
   fig7  — CTAs per kernel                                   (paper Fig. 7)
   det   — determinism across modes/devices/schedulers       (paper §1/§3)
+  dse   — batched config sweep vs solo-run loop             (DSE layer)
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
@@ -19,14 +20,15 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: fig1 fig5 fig6 fig7 det roofline kernels")
+                    help="subset: fig1 fig5 fig6 fig7 det dse roofline "
+                         "kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     args = ap.parse_args()
 
-    from benchmarks import (determinism, fig1_sim_time, fig5_speedup,
-                            fig6_scheduler, fig7_ctas, kernels_bench,
-                            roofline)
+    from benchmarks import (determinism, dse_sweep, fig1_sim_time,
+                            fig5_speedup, fig6_scheduler, fig7_ctas,
+                            kernels_bench, roofline)
 
     suites = {
         "fig7": fig7_ctas.run,
@@ -36,6 +38,7 @@ def main() -> None:
         "fig6": fig6_scheduler.run,
         "fig5": (lambda: fig5_speedup.run(measure_shard=not args.fast)),
         "det": determinism.run,
+        "dse": dse_sweep.run,
     }
     rows = []
     failed = False

@@ -11,15 +11,15 @@ import time
 
 # XLA_FLAGS must be set by the parent before jax import
 import jax
-import jax.numpy as jnp
 from functools import partial
 
 from repro.core import stats as S
+from repro.core.engine import run_workload
 from repro.core.parallel import (permute_state, run_kernel_sharded,
                                  sm_permutation)
 from repro.launch.mesh import make_host_mesh
-from repro.sim.config import RTX3080TI
-from repro.sim.state import init_state, reset_for_kernel
+from repro.sim.config import RTX3080TI, split_config
+from repro.sim.state import init_state
 from repro.workloads import make_workload
 
 
@@ -42,17 +42,13 @@ def main():
                              max_cycles=args.max_cycles,
                              exchange=args.exchange))
 
+    scfg, dyn = split_config(cfg)
+    packed = [k.pack() for k in w.kernels]
+
     def run_all():
-        state = permute_state(init_state(cfg), perm)
-        total = jnp.zeros((), jnp.int32)
-        for k in w.kernels:
-            state = reset_for_kernel(state, cfg)
-            state = runner(state, k.pack())
-            kc = jnp.where(state["ctrl"]["done_cycle"] >= 0,
-                           state["ctrl"]["done_cycle"],
-                           state["ctrl"]["cycle"])
-            total = total + kc
-        state["ctrl"]["total_cycles"] = total
+        state = run_workload(
+            permute_state(init_state(cfg), perm), packed, scfg, dyn,
+            kernel_runner=lambda st, k, d: runner(st, k, dyn=d))
         jax.block_until_ready(state["ctrl"]["total_cycles"])
         return state
 

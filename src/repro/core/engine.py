@@ -8,6 +8,12 @@ Each machine quantum (Δ=16 cycles):
 The SM phase runner is injected (core/parallel.py) so the same engine body
 serves the sequential, vectorized and sharded execution modes — results are
 bit-identical by construction (tests/test_sim_determinism.py).
+
+Config threading: the engine takes the hashable ``StaticConfig`` (jit-static
+shapes) and the ``dyn`` pytree of traced timing parameters separately.  All
+timing numerics enter the compiled program as *arguments*, never as Python
+constants, so ``core/sweep.py`` can vmap the whole engine over a batch of
+dynamic configs (one design-space-exploration lane per config).
 """
 from __future__ import annotations
 
@@ -16,21 +22,23 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.sim.config import GPUConfig
+from repro.sim.config import GPUConfig, StaticConfig, split_config
 from repro.sim.cta import cta_issue
 from repro.sim.memsys import mem_phase
 from repro.sim.state import init_state, reset_for_kernel
 from repro.sim.trace import Workload
 
 
-def quantum_step(state: dict, trace: dict, cfg: GPUConfig, sm_runner):
+def quantum_step(state: dict, trace: dict, cfg: StaticConfig, dyn: dict,
+                 sm_runner):
     t0 = state["ctrl"]["cycle"]
     req, mem, gstats = mem_phase(state["req"], state["mem"], state["stats"],
-                                 t0, cfg, sm_ids=state["ctrl"]["sm_ids"])
+                                 t0, cfg, dyn,
+                                 sm_ids=state["ctrl"]["sm_ids"])
     warp, ctrl, gstats = cta_issue(state["warp"], dict(state["ctrl"]),
                                    gstats, trace, cfg)
     warp, sm, req, stats_sm = sm_runner(warp, state["sm"], req,
-                                        state["stats_sm"], trace, t0)
+                                        state["stats_sm"], trace, t0, dyn)
     cycle_end = t0 + cfg.quantum
     n_instr = trace["n_instr"]
     live = warp["active"] & ~((warp["pc"] >= n_instr)
@@ -44,36 +52,61 @@ def quantum_step(state: dict, trace: dict, cfg: GPUConfig, sm_runner):
             "stats_sm": stats_sm, "stats": gstats}
 
 
-def run_kernel(state: dict, trace: dict, cfg: GPUConfig, sm_runner,
-               max_cycles: int = 1 << 20):
+def run_kernel(state: dict, trace: dict, cfg: StaticConfig, dyn: dict,
+               sm_runner, max_cycles: int = 1 << 20):
     def cond(st):
         return (st["ctrl"]["done_cycle"] < 0) & \
             (st["ctrl"]["cycle"] < max_cycles)
 
     def body(st):
-        return quantum_step(st, trace, cfg, sm_runner)
+        return quantum_step(st, trace, cfg, dyn, sm_runner)
 
     return jax.lax.while_loop(cond, body, state)
+
+
+def kernel_cycles(ctrl: dict):
+    """Cycles charged to the kernel that just ran: its done_cycle, or the
+    current clock if it hit max_cycles.  The ONE accounting rule every
+    execution mode shares (solo, vmapped sweep, sharded)."""
+    return jnp.where(ctrl["done_cycle"] >= 0, ctrl["done_cycle"],
+                     ctrl["cycle"])
+
+
+def run_workload(state: dict, kernels: list, cfg: StaticConfig, dyn: dict,
+                 sm_runner=None, max_cycles: int = 1 << 20,
+                 state_transform=None, kernel_runner=None) -> dict:
+    """Run packed kernels back-to-back, accumulating total cycles.
+
+    With the default kernel_runner this is a pure traced function of
+    (state, dyn): jit it once, or vmap it over a stacked ``dyn`` batch for
+    a design-space sweep (core/sweep.py).  Pass ``kernel_runner`` —
+    ``(state, packed, dyn) -> state`` — to substitute a pre-jitted or
+    sharded per-kernel step while keeping this accounting loop shared.
+    """
+    if kernel_runner is None:
+        def kernel_runner(st, packed, d):
+            return run_kernel(st, packed, cfg, d, sm_runner, max_cycles)
+    total_cycles = jnp.zeros((), jnp.int32)
+    for packed in kernels:
+        state = reset_for_kernel(state, cfg)
+        if state_transform is not None:
+            state = state_transform(state)
+        state = kernel_runner(state, packed, dyn)
+        total_cycles = total_cycles + kernel_cycles(state["ctrl"])
+    state["ctrl"]["total_cycles"] = total_cycles
+    return state
 
 
 def simulate(workload: Workload, cfg: GPUConfig, sm_runner,
              max_cycles: int = 1 << 20, jit: bool = True,
              state_transform=None) -> dict:
     """Run all kernels of a workload; returns the final state."""
-    state = init_state(cfg)
-    runner = partial(run_kernel, cfg=cfg, sm_runner=sm_runner,
+    scfg, dyn = split_config(cfg)
+    runner = partial(run_kernel, cfg=scfg, sm_runner=sm_runner,
                      max_cycles=max_cycles)
     if jit:
-        runner = jax.jit(runner, static_argnames=())
-    total_cycles = jnp.zeros((), jnp.int32)
-    for kernel in workload.kernels:
-        state = reset_for_kernel(state, cfg)
-        if state_transform is not None:
-            state = state_transform(state)
-        state = runner(state, kernel.pack())
-        kc = jnp.where(state["ctrl"]["done_cycle"] >= 0,
-                       state["ctrl"]["done_cycle"],
-                       state["ctrl"]["cycle"])
-        total_cycles = total_cycles + kc
-    state["ctrl"]["total_cycles"] = total_cycles
-    return state
+        runner = jax.jit(runner)
+    return run_workload(
+        init_state(scfg), [k.pack() for k in workload.kernels], scfg, dyn,
+        state_transform=state_transform,
+        kernel_runner=lambda st, packed, d: runner(st, packed, dyn=d))

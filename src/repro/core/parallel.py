@@ -23,27 +23,33 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.sim.config import GPUConfig
+from repro.sim.config import GPUConfig, split_config, static_part
 from repro.sim.cta import cta_issue
 from repro.sim.memsys import mem_phase
 from repro.sim.smcore import sm_quantum_single
 
 
-def make_sm_runner(cfg: GPUConfig, mode: str = "vmap", mesh: Mesh = None):
-    """Returns sm_runner(warp, sm, req, stats_sm, trace, t0)."""
-    single = partial(sm_quantum_single, cfg=cfg)
+def make_sm_runner(cfg, mode: str = "vmap", mesh: Mesh = None):
+    """Returns sm_runner(warp, sm, req, stats_sm, trace, t0, dyn).
+
+    cfg may be a full GPUConfig or just its StaticConfig half — only static
+    shape fields are closed over; all timing numerics flow in via ``dyn``.
+    """
+    scfg = static_part(cfg)
 
     if mode == "vmap":
-        def runner(warp, sm, req, stats_sm, trace, t0):
+        def runner(warp, sm, req, stats_sm, trace, t0, dyn):
             return jax.vmap(
-                lambda w, s, r, st: single(w, s, r, st, trace, t0))(
+                lambda w, s, r, st: sm_quantum_single(
+                    w, s, r, st, trace, t0, scfg, dyn))(
                 warp, sm, req, stats_sm)
         return runner
 
     if mode == "seq":
-        def runner(warp, sm, req, stats_sm, trace, t0):
+        def runner(warp, sm, req, stats_sm, trace, t0, dyn):
             return jax.lax.map(
-                lambda a: single(a[0], a[1], a[2], a[3], trace, t0),
+                lambda a: sm_quantum_single(a[0], a[1], a[2], a[3], trace,
+                                            t0, scfg, dyn),
                 (warp, sm, req, stats_sm))
         return runner
 
@@ -67,21 +73,22 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
     """
     from jax.experimental.shard_map import shard_map
 
+    scfg = static_part(cfg)
     n_dev = mesh.shape["sm"]
-    assert cfg.n_sm % n_dev == 0, (cfg.n_sm, n_dev)
-    chunk = cfg.n_sm // n_dev
+    assert scfg.n_sm % n_dev == 0, (scfg.n_sm, n_dev)
+    chunk = scfg.n_sm // n_dev
 
-    def body(warp, sm, req, stats_sm, mem, ctrl, gstats, trace):
+    def body(warp, sm, req, stats_sm, mem, ctrl, gstats, trace, dyn):
         t0 = ctrl["cycle"]
         # --- serial region, replicated ---------------------------------
         req_f = jax.tree_util.tree_map(
             lambda x: jax.lax.all_gather(x, "sm", axis=0, tiled=True), req)
         warp_f = jax.tree_util.tree_map(
             lambda x: jax.lax.all_gather(x, "sm", axis=0, tiled=True), warp)
-        req_f, mem, gstats = mem_phase(req_f, mem, gstats, t0, cfg,
+        req_f, mem, gstats = mem_phase(req_f, mem, gstats, t0, scfg, dyn,
                                        sm_ids=ctrl["sm_ids"])
         warp_f, ctrl, gstats = cta_issue(warp_f, dict(ctrl), gstats, trace,
-                                         cfg)
+                                         scfg)
         i = jax.lax.axis_index("sm")
         take = lambda x: jax.lax.dynamic_slice_in_dim(  # noqa: E731
             x, i * chunk, chunk, axis=0)
@@ -96,7 +103,7 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
                 warp_l, sm, req_l, stats_sm, dbg = carry
                 warp_l, sm, req_l, stats_sm = jax.vmap(
                     lambda w, s, r, st: sm_cycle_single(
-                        w, s, r, st, trace, t0 + i, cfg))(
+                        w, s, r, st, trace, t0 + i, scfg, dyn))(
                     warp_l, sm, req_l, stats_sm)
                 gathered = jax.lax.all_gather(req_l["stage"], "sm", axis=0,
                                               tiled=True)
@@ -104,15 +111,15 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
                 return warp_l, sm, req_l, stats_sm, dbg
 
             warp_l, sm, req_l, stats_sm, _ = jax.lax.fori_loop(
-                0, cfg.quantum, cyc,
+                0, scfg.quantum, cyc,
                 (warp_l, sm, req_l, stats_sm, jnp.zeros((), jnp.int32)))
         else:
             warp_l, sm, req_l, stats_sm = jax.vmap(
                 lambda w, s, r, st: sm_quantum_single(w, s, r, st, trace, t0,
-                                                      cfg))(
+                                                      scfg, dyn))(
                 warp_l, sm, req_l, stats_sm)
         # --- done detection (replicated) --------------------------------
-        cycle_end = t0 + cfg.quantum
+        cycle_end = t0 + scfg.quantum
         n_instr = trace["n_instr"]
         live_l = warp_l["active"] & ~((warp_l["pc"] >= n_instr)
                                       & (warp_l["pending"] == 0))
@@ -132,7 +139,7 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
     def spec_like(tree, spec):
         return jax.tree_util.tree_map(lambda _: spec, tree)
 
-    def sharded_step(state, trace):
+    def sharded_step(state, trace, dyn):
         in_specs = (spec_like(state["warp"], sm_spec),
                     spec_like(state["sm"], sm_spec),
                     spec_like(state["req"], sm_spec),
@@ -140,13 +147,14 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
                     spec_like(state["mem"], rep),
                     spec_like(state["ctrl"], rep),
                     spec_like(state["stats"], rep),
-                    spec_like(trace, rep))
+                    spec_like(trace, rep),
+                    spec_like(dyn, rep))
         out_specs = in_specs[:7]
         fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
         warp, sm, req, stats_sm, mem, ctrl, gstats = fn(
             state["warp"], state["sm"], state["req"], state["stats_sm"],
-            state["mem"], state["ctrl"], state["stats"], trace)
+            state["mem"], state["ctrl"], state["stats"], trace, dyn)
         return {"warp": warp, "sm": sm, "req": req, "mem": mem,
                 "ctrl": ctrl, "stats_sm": stats_sm, "stats": gstats}
 
@@ -154,7 +162,10 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
 
 
 def run_kernel_sharded(state, trace, cfg: GPUConfig, mesh: Mesh,
-                       max_cycles: int = 1 << 20, exchange: str = "window"):
+                       max_cycles: int = 1 << 20, exchange: str = "window",
+                       dyn: dict = None):
+    if dyn is None:
+        _, dyn = split_config(cfg)
     step = make_sharded_quantum(cfg, mesh, exchange)
 
     def cond(st):
@@ -162,7 +173,7 @@ def run_kernel_sharded(state, trace, cfg: GPUConfig, mesh: Mesh,
             (st["ctrl"]["cycle"] < max_cycles)
 
     def body(st):
-        return step(st, trace)
+        return step(st, trace, dyn)
 
     return jax.lax.while_loop(cond, body, state)
 

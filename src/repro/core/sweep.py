@@ -1,0 +1,94 @@
+"""Batched design-space exploration: vmap the WHOLE simulator over configs.
+
+The tentpole consequence of the static/dynamic config split (sim/config.py):
+every timing parameter reaches the compiled engine as a traced argument, so
+a sweep over N candidate configs that share one ``StaticConfig`` shape is a
+single ``jit(vmap(run_workload))`` — one XLA program, one compilation, all
+lanes advancing together on one chip.  Each vmap lane is bit-identical to a
+solo run of that config (tests/test_dse_sweep.py): JAX's while_loop batching
+rule keeps finished lanes frozen via select, so early-finishing configs are
+unaffected by stragglers.
+
+Usage:
+    cfgs = [dataclasses.replace(TINY, l2_lat=v) for v in (16, 32, 64, ...)]
+    result = sweep(workload, cfgs)
+    result.stats  # list of per-config finalized stat dicts
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats as S
+from repro.core.engine import run_workload
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import StaticConfig, split_config
+from repro.sim.state import init_state
+from repro.sim.trace import Workload
+
+
+def stack_dyn(cfgs):
+    """Split each config and stack the dynamic pytrees along a new leading
+    lane axis.  All configs must share the same StaticConfig (one shape =
+    one compiled program); raises ValueError otherwise."""
+    if not cfgs:
+        raise ValueError("empty config list")
+    splits = [split_config(c) for c in cfgs]
+    scfg = splits[0][0]
+    for i, (s, _) in enumerate(splits[1:], start=1):
+        if s != scfg:
+            raise ValueError(
+                f"config {i} has a different static shape than config 0 "
+                f"(vmap lanes must share one StaticConfig):\n  {s}\n  {scfg}")
+    dyn_batch = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[d for _, d in splits])
+    return scfg, dyn_batch
+
+
+def make_sweep_runner(scfg: StaticConfig, packed_kernels: list,
+                      mode: str = "vmap", max_cycles: int = 1 << 20):
+    """One compiled program: dyn_batch (lane-stacked pytree) -> final state
+    batch.  ``mode`` picks the SM-phase runner used inside every lane."""
+    sm_runner = make_sm_runner(scfg, mode)
+
+    def run_one(dyn):
+        state = init_state(scfg)
+        return run_workload(state, packed_kernels, scfg, dyn, sm_runner,
+                            max_cycles)
+
+    return jax.jit(jax.vmap(run_one))
+
+
+def take_lane(batched_state: dict, i: int) -> dict:
+    """Slice lane ``i`` out of a batched final state."""
+    return jax.tree_util.tree_map(lambda x: x[i], batched_state)
+
+
+@dataclass
+class SweepResult:
+    scfg: StaticConfig
+    state: dict                       # batched final state (leading lane axis)
+    n: int
+    stats: list = field(default_factory=list)   # per-lane finalized dicts
+
+    @property
+    def cycles(self):
+        return [s["cycles"] for s in self.stats]
+
+    def table(self, keys=("cycles", "ipc", "l1_miss", "l2_miss",
+                          "dram_req")) -> list:
+        return [{k: s[k] for k in keys} for s in self.stats]
+
+
+def sweep(workload: Workload, cfgs, mode: str = "vmap",
+          max_cycles: int = 1 << 20) -> SweepResult:
+    """Run ``workload`` under every config in one compiled, vmapped call."""
+    scfg, dyn_batch = stack_dyn(cfgs)
+    packed = [k.pack() for k in workload.kernels]
+    runner = make_sweep_runner(scfg, packed, mode, max_cycles)
+    bstate = jax.block_until_ready(runner(dyn_batch))
+    n = len(cfgs)
+    stats = [S.finalize(take_lane(bstate, i)) for i in range(n)]
+    return SweepResult(scfg=scfg, state=bstate, n=n, stats=stats)

@@ -1,0 +1,115 @@
+"""Design-space-exploration launcher — N GPU configs, ONE compiled program.
+
+  python -m repro.launch.dse --n 8 --workload hotspot --scale 0.02
+  python -m repro.launch.dse --base 3080ti --axis dram_row_penalty \\
+      --values 8,16,24,48
+  python -m repro.launch.dse --n 8 --check     # verify vs solo runs
+
+Without --axis, a default grid is swept: L2 latency × scheduler (GTO/LRR),
+the two knobs with the clearest IPC signal on the paper's benchmarks.
+All lanes share one StaticConfig shape — only traced timing parameters and
+the scheduler selector differ, which is what makes the whole sweep a single
+``jit(vmap(engine))`` call (core/sweep.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.core import stats as S
+from repro.core.engine import run_workload
+from repro.core.parallel import make_sm_runner
+from repro.core.sweep import sweep
+from repro.sim.config import (DYNAMIC_FIELDS, RTX3080TI, TINY, GPUConfig,
+                              split_config)
+from repro.sim.state import init_state
+from repro.workloads import make_workload
+
+BASES = {"tiny": TINY, "3080ti": RTX3080TI}
+
+
+def default_grid(base: GPUConfig, n: int) -> list:
+    """n configs: alternate GTO/LRR while stepping L2 latency."""
+    out = []
+    for i in range(n):
+        out.append(dataclasses.replace(
+            base,
+            l2_lat=base.l2_lat // 2 + (i // 2) * base.l2_lat // 2,
+            scheduler="gto" if i % 2 == 0 else "lrr"))
+    return out
+
+
+def axis_grid(base: GPUConfig, axis: str, values: list) -> list:
+    if axis == "scheduler":
+        return [dataclasses.replace(base, scheduler=v) for v in values]
+    if axis not in DYNAMIC_FIELDS:
+        raise SystemExit(f"--axis must be one of {DYNAMIC_FIELDS} or "
+                         f"'scheduler', got {axis!r}")
+    return [dataclasses.replace(base, **{axis: int(v)}) for v in values]
+
+
+def describe(cfg: GPUConfig) -> dict:
+    d = {k: getattr(cfg, k) for k in DYNAMIC_FIELDS}
+    d["scheduler"] = cfg.scheduler
+    return d
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", choices=sorted(BASES), default="tiny")
+    ap.add_argument("--workload", default="hotspot")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--axis", default="",
+                    help="sweep one config field instead of the default grid")
+    ap.add_argument("--values", default="",
+                    help="comma-separated values for --axis")
+    ap.add_argument("--max-cycles", type=int, default=1 << 15)
+    ap.add_argument("--check", action="store_true",
+                    help="verify every lane against a solo engine run")
+    args = ap.parse_args(argv)
+
+    base = BASES[args.base]
+    if args.axis:
+        values = [v for v in args.values.split(",") if v]
+        if not values:
+            raise SystemExit("--axis needs --values v1,v2,...")
+        cfgs = axis_grid(base, args.axis, values)
+    else:
+        cfgs = default_grid(base, args.n)
+
+    w = make_workload(args.workload, scale=args.scale)
+    t0 = time.time()
+    result = sweep(w, cfgs, max_cycles=args.max_cycles)
+    wall = time.time() - t0
+
+    rows = []
+    for cfg, st in zip(cfgs, result.stats):
+        rows.append(dict(describe(cfg), cycles=st["cycles"], ipc=st["ipc"],
+                         l1_miss=st["l1_miss"], l2_miss=st["l2_miss"],
+                         dram_req=st["dram_req"]))
+    print(json.dumps(rows, indent=1))
+    print(f"[dse] {len(cfgs)} configs × {w.name}: one compiled call, "
+          f"wall={wall:.1f}s ({len(cfgs) / max(wall, 1e-9):.2f} configs/s)")
+
+    if args.check:
+        # one compiled UNBATCHED program checks every lane: dyn is a traced
+        # argument, so the N solo runs share a single compilation
+        scfg = result.scfg
+        packed = [k.pack() for k in w.kernels]
+        runner = make_sm_runner(scfg, "vmap")
+        solo_run = jax.jit(lambda dyn: run_workload(
+            init_state(scfg), packed, scfg, dyn, runner, args.max_cycles))
+        for i, cfg in enumerate(cfgs):
+            solo = S.comparable(S.finalize(solo_run(split_config(cfg)[1])))
+            lane = S.comparable(result.stats[i])
+            assert lane == solo, (i, lane, solo)
+        print(f"[dse] check OK: all {len(cfgs)} lanes bit-exact vs solo")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,56 @@ _RESULT2_OPS = {"copy", "transpose", "reduce-window", "sort"}
 _FULL_OPS = {"dot", "custom-call", "convolution"}
 
 
+def _split_args(s: str) -> list[str]:
+    """Split an HLO operand list on top-level commas only (shapes like
+    ``f32[8,64,64]{2,1,0}`` and tuple types carry nested commas)."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _call_args(line: str, op: str) -> str:
+    """Balanced-paren extraction of the argument text of ``op(...)``."""
+    i = line.find(op + "(")
+    if i < 0:
+        return ""
+    i += len(op) + 1
+    depth, j = 1, i
+    while j < len(line) and depth:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    return line[i:j - 1]
+
+
+def _operand_name(arg: str) -> str:
+    toks = arg.split()
+    return toks[-1].lstrip("%") if toks else ""
+
+
+def _operand_type(arg: str, sym: dict) -> str:
+    """Operand type: inline (``f32[16,64]{1,0} %x`` — modern dialect) or
+    looked up from the symbol table (bare ``%x``)."""
+    toks = arg.split()
+    if len(toks) >= 2:
+        return " ".join(toks[:-1])
+    return sym.get(_operand_name(arg), "")
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):
@@ -165,31 +215,23 @@ def analyze(text: str) -> Costs:
                 for x in dims:
                     nres *= x
                 cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
-                args = re.search(r"\(([^)]*)\)", line[line.index(op):])
+                args = _split_args(_call_args(line, op))
                 contr = 1
                 if cdims and args:
-                    lhs = args.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_t = sym.get(lhs, "")
-                    ldims = _shape_dims(lhs_t)
+                    ldims = _shape_dims(_operand_type(args[0], sym))
                     for ci in cdims.group(1).split(","):
                         if ci and int(ci) < len(ldims):
                             contr *= ldims[int(ci)]
                 total.flops += 2.0 * nres * contr
             # --- bytes ---------------------------------------------------
             def _operands():
-                if (op + "(") not in line:
-                    return []
-                m2 = re.search(r"\(([^)]*)\)", line[line.index(op + "("):])
-                if not m2:
-                    return []
-                return [a.strip().lstrip("%") for a in m2.group(1).split(",")]
+                return _split_args(_call_args(line, op))
 
             base = op[:-6] if op.endswith("-start") else op
             if base in _FULL_OPS:
                 b = _type_bytes(rtype)
                 for a in _operands():
-                    if a in sym:
-                        b += _type_bytes(sym[a])
+                    b += _type_bytes(_operand_type(a, sym))
                 total.add_bytes(base, b)
             elif base in _SLICE_OPS:
                 # 1× result: the consumer (dot) counts the read again
@@ -199,8 +241,10 @@ def analyze(text: str) -> Costs:
             elif base in _UPDATE_OPS:
                 ops_ = _operands()
                 idx = _UPDATE_OPS[base]
-                if len(ops_) > idx and ops_[idx] in sym:
-                    total.add_bytes(base, 2 * _type_bytes(sym[ops_[idx]]))
+                upd_t = _operand_type(ops_[idx], sym) if len(ops_) > idx \
+                    else ""
+                if upd_t:
+                    total.add_bytes(base, 2 * _type_bytes(upd_t))
                 else:
                     total.add_bytes(base, 2 * _type_bytes(rtype))
             elif base in _COLLECTIVES:

@@ -16,7 +16,9 @@ Timing abstraction (documented deviations from Accel-sim in DESIGN.md):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
+
+import jax.numpy as jnp
 
 # instruction classes (BAR = CTA-level barrier, __syncthreads)
 FP32, INT32, SFU, TENSOR, LDG, STG, BAR = range(7)
@@ -30,6 +32,72 @@ UNIT_OF_CLASS = (U_FP32, U_INT, U_SFU, U_TENSOR, U_LSU, U_LSU, U_INT)
 LATENCY_OF_CLASS = (4, 4, 16, 8, 0, 0, 1)
 # dispatch interval (cycles the port stays busy per issue)
 DISPATCH_OF_CLASS = (1, 1, 4, 2, 1, 1, 1)
+
+# warp scheduler selector (a *dynamic* config value — traced, vmappable)
+SCHED_GTO, SCHED_LRR = 0, 1
+SCHEDULERS = {"gto": SCHED_GTO, "lrr": SCHED_LRR}
+
+# timing parameters that are plain numerics inside the compiled program:
+# they may differ lane-by-lane in a batched design-space sweep.
+DYNAMIC_FIELDS = ("l1_hit_lat", "l2_lat", "part_lat", "dram_burst",
+                  "dram_row_penalty", "icnt_lat")
+
+
+@dataclass(frozen=True)
+class StaticConfig:
+    """Shape-determining (hashable, jit-static) half of a GPU config.
+
+    Two configs with equal ``StaticConfig`` produce identical state/trace
+    array shapes, so a whole batch of them can run under one ``vmap`` —
+    only the dynamic pytree (``split_config``) varies per lane.
+    """
+    n_sm: int
+    warps_per_sm: int
+    n_subcores: int
+    max_cta_per_sm: int
+    l1_sets: int
+    l1_ways: int
+    l2_slices: int
+    l2_sets: int
+    l2_ways: int
+    dram_channels: int
+    dram_row_div: int
+    quantum: int
+    mshr_per_sm: int
+    addrset_cap: int
+    mem_blocks: int
+
+
+def static_part(cfg) -> StaticConfig:
+    """Extract the hashable static half from a full GPUConfig (identity on
+    an already-static config)."""
+    if isinstance(cfg, StaticConfig):
+        return cfg
+    return StaticConfig(
+        **{f.name: getattr(cfg, f.name) for f in fields(StaticConfig)})
+
+
+def split_config(cfg: "GPUConfig | StaticConfig", dyn_overrides=None):
+    """(GPUConfig) -> (StaticConfig, dynamic pytree).
+
+    The dynamic pytree is a flat dict of int32 scalars — every leaf is a
+    traced value inside the compiled simulator, so a stacked batch of them
+    (one lane per candidate config) vmaps the whole engine over configs.
+    ``sched`` carries the scheduler selector (SCHED_GTO / SCHED_LRR).
+    """
+    if isinstance(cfg, StaticConfig):
+        if dyn_overrides is None:
+            raise ValueError("StaticConfig alone has no dynamic values")
+        static = cfg
+        src = dict(dyn_overrides)
+    else:
+        static = static_part(cfg)
+        src = {k: getattr(cfg, k) for k in DYNAMIC_FIELDS}
+        src["sched"] = SCHEDULERS[cfg.scheduler]
+        if dyn_overrides:
+            src.update(dyn_overrides)
+    dyn = {k: jnp.asarray(v, jnp.int32) for k, v in src.items()}
+    return static, dyn
 
 
 @dataclass(frozen=True)
@@ -65,8 +133,12 @@ class GPUConfig:
     mem_blocks: int = 1 << 22    # simulated VRAM in 128 B blocks
 
     def __post_init__(self):
-        assert self.quantum <= self.icnt_lat
-        assert self.warps_per_sm % self.n_subcores == 0
+        assert self.quantum <= self.icnt_lat, (
+            f"quantum Δ={self.quantum} must be ≤ icnt_lat={self.icnt_lat} "
+            "(SM shards run one full quantum between memory exchanges)")
+        assert self.warps_per_sm % self.n_subcores == 0, (
+            f"warps_per_sm={self.warps_per_sm} must be divisible by "
+            f"n_subcores={self.n_subcores}")
 
 
 RTX3080TI = GPUConfig()

@@ -9,8 +9,15 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.sim.config import StaticConfig
 
-def cta_issue(warp: dict, ctrl: dict, stats: dict, trace: dict, cfg):
+
+def cta_issue(warp: dict, ctrl: dict, stats: dict, trace: dict,
+              cfg: StaticConfig):
+    """Dispatch CTAs to free warp slots.  Deliberately takes only the
+    static config: dispatch depends on shape/capacity fields alone, so a
+    vmapped config sweep (core/sweep.py) shares this logic across lanes
+    with no per-lane dynamic inputs."""
     ns, w = warp["active"].shape
     n_instr = trace["n_instr"]
     wpc = trace["warps_per_cta"]

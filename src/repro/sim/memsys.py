@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.sim.config import GPUConfig
+from repro.sim.config import StaticConfig
 
 BIG = jnp.int32(1 << 30)
 
@@ -53,9 +53,13 @@ def _lex_sort(primary, secondary, tertiary, valid):
     return o1[o2]
 
 
-def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: GPUConfig,
-              sm_ids=None):
+def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: StaticConfig,
+              dyn: dict, sm_ids=None):
     """Process the event horizon [t0, t0+Δ). Returns (req, mem, stats).
+
+    cfg is the hashable static shape config; dyn carries the traced timing
+    parameters (l2_lat, part_lat, icnt_lat, dram_burst, dram_row_penalty)
+    so a vmapped config sweep varies them per lane.
 
     sm_ids: (n_sm,) ORIGINAL SM id per array position — canonical tie-break
     order must follow original ids so results are invariant under SM-axis
@@ -96,8 +100,8 @@ def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: GPUConfig,
     hit = jnp.any(ways == o_addr[:, None], axis=1) & o_sel
     miss = o_sel & ~hit
 
-    resp_t = start + cfg.l2_lat + cfg.icnt_lat
-    dram_t = start + cfg.l2_lat + cfg.part_lat
+    resp_t = start + dyn["l2_lat"] + dyn["icnt_lat"]
+    dram_t = start + dyn["l2_lat"] + dyn["part_lat"]
 
     new_stage = jnp.where(hit, 3, jnp.where(miss, 2, stage[order]))
     new_t = jnp.where(hit, resp_t, jnp.where(miss, dram_t, o_t))
@@ -145,12 +149,12 @@ def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: GPUConfig,
     prev_row = jnp.concatenate([jnp.full((1,), -2, jnp.int32), o_row[:-1]])
     prev_row = jnp.where(seg2, mem["dram_row"][ch_c], prev_row)
     row_hit = (o_row == prev_row) & o_sel2
-    service2 = jnp.where(row_hit, cfg.dram_burst,
-                         cfg.dram_burst + cfg.dram_row_penalty)
+    service2 = jnp.where(row_hit, dyn["dram_burst"],
+                         dyn["dram_burst"] + dyn["dram_row_penalty"])
     arrival2 = jnp.maximum(o_t2, mem["dram_busy"][ch_c])
     finish2 = _seg_maxplus(seg2, service2, arrival2)
 
-    resp2 = finish2 + cfg.part_lat + cfg.icnt_lat
+    resp2 = finish2 + dyn["part_lat"] + dyn["icnt_lat"]
     stage = stage.at[o_rid2].set(jnp.where(o_sel2, 3, stage[o_rid2]))
     t = t.at[o_rid2].set(jnp.where(o_sel2, resp2, t[o_rid2]))
 

@@ -9,17 +9,20 @@ Per cycle, per sub-core: deliver resolved memory responses, pick an issuable
 warp (GTO: greedy-then-oldest; or LRR), look up L1 on memory ops (miss ⇒
 allocate an MSHR row that the memory phase will service next quantum),
 update the scoreboard-lite dependency state and the per-SM stats.
+
+Config threading: every function takes the hashable ``StaticConfig`` (shape
+decisions: array sizes, loop bounds, sub-core count) plus the ``dyn`` pytree
+of traced timing parameters (latencies + scheduler selector).  Nothing
+numeric is closed over as a Python constant, so the whole SM phase vmaps
+over a batch of dynamic configs (core/sweep.py).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.sim.config import (BAR, DISPATCH_OF_CLASS, GPUConfig,
-                              LATENCY_OF_CLASS, LDG, N_UNITS, STG,
-                              UNIT_OF_CLASS)
+from repro.sim.config import (BAR, DISPATCH_OF_CLASS, LATENCY_OF_CLASS, LDG,
+                              SCHED_GTO, STG, StaticConfig, UNIT_OF_CLASS)
 from repro.sim.trace import gen_address
 
 BIG = jnp.int32(1 << 30)
@@ -52,7 +55,7 @@ def _release_barriers(warp, n_instr, t):
                 ready_at=jnp.where(release, t, warp["ready_at"]))
 
 
-def _l1_access(sm, addr, t, cfg: GPUConfig):
+def _l1_access(sm, addr, t, cfg: StaticConfig):
     """One L1 probe for a scalar addr. Returns (hit, sm_state')."""
     st = (addr % cfg.l1_sets).astype(jnp.int32)
     ways = sm["l1_tag"][st]                       # (ways,)
@@ -66,7 +69,7 @@ def _l1_access(sm, addr, t, cfg: GPUConfig):
     return hit, dict(sm, l1_tag=l1_tag, l1_lru=l1_lru)
 
 
-def _addrset_insert(sm, addr, enable, cfg: GPUConfig):
+def _addrset_insert(sm, addr, enable, cfg: StaticConfig):
     """Bounded open-addressing set insert (the paper's set-valued stat,
     'per-SM instance + terminal union' strategy)."""
     cap = cfg.addrset_cap
@@ -86,7 +89,8 @@ def _addrset_insert(sm, addr, enable, cfg: GPUConfig):
                 addrset_over=sm["addrset_over"] + over)
 
 
-def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: GPUConfig):
+def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
+                   dyn: dict):
     """Issue at most one instruction on sub-core `sc` (single SM view)."""
     nsc = cfg.n_subcores
     w_ids = jnp.arange(sc, cfg.warps_per_sm, nsc, dtype=jnp.int32)
@@ -106,13 +110,14 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: GPUConfig):
     free_rows = jnp.sum(req["stage"] == 0) > 0
     cand = ready & ufree & (~is_mem | free_rows)
 
-    # scheduler: GTO (greedy warp first, then oldest) or loose round-robin
-    if cfg.scheduler == "gto":
-        greedy = w_ids == sm["last_issued"][sc]
-        key = jnp.where(cand, jnp.where(greedy, -1, w_ids), BIG)
-    else:  # lrr
-        rot = (w_ids - sm["last_issued"][sc] - 1) % cfg.warps_per_sm
-        key = jnp.where(cand, rot, BIG)
+    # scheduler: GTO (greedy warp first, then oldest) or loose round-robin.
+    # The selector is a traced value so one compiled program serves both —
+    # and a vmapped sweep can mix GTO and LRR lanes.
+    greedy = w_ids == sm["last_issued"][sc]
+    key_gto = jnp.where(greedy, -1, w_ids)
+    key_lrr = (w_ids - sm["last_issued"][sc] - 1) % cfg.warps_per_sm
+    key = jnp.where(dyn["sched"] == SCHED_GTO, key_gto, key_lrr)
+    key = jnp.where(cand, key, BIG)
     sel = jnp.argmin(key)
     do = cand[sel]
     wsel = w_ids[sel]                   # global warp slot
@@ -142,7 +147,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: GPUConfig):
         addr=req["addr"].at[row].set(
             jnp.where(alloc, addr, req["addr"][row])),
         t=req["t"].at[row].set(
-            jnp.where(alloc, t + cfg.icnt_lat, req["t"][row])),
+            jnp.where(alloc, t + dyn["icnt_lat"], req["t"][row])),
         warp=req["warp"].at[row].set(
             jnp.where(alloc, wsel, req["warp"][row])),
         is_store=req["is_store"].at[row].set(
@@ -151,7 +156,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: GPUConfig):
 
     # ---- dependency / latency ----------------------------------------------
     lat = jnp.asarray(LATENCY_OF_CLASS, jnp.int32)[sop]
-    lat = jnp.where(sop == LDG, jnp.where(hit, cfg.l1_hit_lat, 1), lat)
+    lat = jnp.where(sop == LDG, jnp.where(hit, dyn["l1_hit_lat"], 1), lat)
     dep_next = jnp.where(spc + 1 < n_instr, trace["dep"][
         jnp.clip(spc + 1, 0, n_instr - 1)], False)
     wait_lat = jnp.where(dep_next, jnp.maximum(lat, 1), 1)
@@ -191,14 +196,15 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: GPUConfig):
     return warp, sm, req, stats, do
 
 
-def sm_cycle_single(warp, sm, req, stats, trace, t, cfg: GPUConfig):
+def sm_cycle_single(warp, sm, req, stats, trace, t, cfg: StaticConfig,
+                    dyn: dict):
     """One cycle of one SM (arrays without the n_sm axis)."""
     warp, req = _deliver(warp, req, t)
     warp = _release_barriers(warp, trace["n_instr"], t)
     issued_any = jnp.zeros((), jnp.bool_)
     for sc in range(cfg.n_subcores):
         warp, sm, req, stats, did = _issue_subcore(
-            warp, sm, req, stats, trace, t, sc, cfg)
+            warp, sm, req, stats, trace, t, sc, cfg, dyn)
         issued_any = issued_any | did
     stats = dict(
         stats,
@@ -209,10 +215,11 @@ def sm_cycle_single(warp, sm, req, stats, trace, t, cfg: GPUConfig):
     return warp, sm, req, stats
 
 
-def sm_quantum_single(warp, sm, req, stats, trace, t0, cfg: GPUConfig):
+def sm_quantum_single(warp, sm, req, stats, trace, t0, cfg: StaticConfig,
+                      dyn: dict):
     """Run Δ consecutive cycles for one SM — the communication window."""
     def body(i, carry):
         warp, sm, req, stats = carry
-        return sm_cycle_single(warp, sm, req, stats, trace, t0 + i, cfg)
+        return sm_cycle_single(warp, sm, req, stats, trace, t0 + i, cfg, dyn)
 
     return jax.lax.fori_loop(0, cfg.quantum, body, (warp, sm, req, stats))

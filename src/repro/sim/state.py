@@ -12,10 +12,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.sim.config import GPUConfig, N_UNITS
+from repro.sim.config import N_UNITS, StaticConfig
 
 
-def init_state(cfg: GPUConfig) -> dict:
+def init_state(cfg: StaticConfig) -> dict:
     ns, w, m = cfg.n_sm, cfg.warps_per_sm, cfg.mshr_per_sm
     sc = cfg.n_subcores
     i32 = jnp.int32
@@ -86,7 +86,7 @@ def init_state(cfg: GPUConfig) -> dict:
     }
 
 
-def reset_for_kernel(state: dict, cfg: GPUConfig) -> dict:
+def reset_for_kernel(state: dict, cfg: StaticConfig) -> dict:
     """Between kernels: clear warps/requests, flush L1 (Accel-sim semantics),
     keep L2/DRAM state and accumulated stats."""
     s = init_state(cfg)

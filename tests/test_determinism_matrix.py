@@ -1,0 +1,99 @@
+"""Determinism golden harness — every execution mode, checked two ways.
+
+1. Cross-mode: seq / vmap (and shard when ≥2 devices are visible) must be
+   bitwise-identical on the TINY config.
+2. Cross-PR: results must ALSO match the committed golden JSON
+   (tests/golden/determinism_tiny.json), so a change that breaks timing
+   semantics in *all* modes at once — invisible to pairwise comparison —
+   still fails loudly.
+
+Regenerate the golden (only after an intentional timing-model change):
+    PYTHONPATH=src python tests/test_determinism_matrix.py --regen
+"""
+import json
+import os
+from functools import partial
+
+import jax
+import pytest
+
+from repro.core import stats as S
+from repro.core.engine import run_workload, simulate
+from repro.core.parallel import (make_sm_runner, permute_state,
+                                 run_kernel_sharded, sm_permutation)
+from repro.sim.config import TINY, split_config
+from repro.sim.state import init_state
+from repro.workloads import make_workload
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "determinism_tiny.json")
+CASES = (("hotspot", 0.02), ("myocyte", 1.0))
+MAX_CYCLES = 1 << 15
+
+
+def run_mode(workload, mode):
+    return S.comparable(S.finalize(simulate(
+        workload, TINY, make_sm_runner(TINY, mode), max_cycles=MAX_CYCLES)))
+
+
+def run_shard(workload, n_dev, policy="static", exchange="window"):
+    from repro.launch.mesh import make_host_mesh
+    cfg = TINY
+    scfg, dyn = split_config(cfg)
+    mesh = make_host_mesh(n_dev, "sm")
+    state = permute_state(init_state(cfg), sm_permutation(cfg, n_dev, policy))
+    runner = jax.jit(partial(run_kernel_sharded, cfg=cfg, mesh=mesh,
+                             max_cycles=MAX_CYCLES, exchange=exchange))
+    state = run_workload(
+        state, [k.pack() for k in workload.kernels], scfg, dyn,
+        kernel_runner=lambda st, packed, d: runner(st, packed, dyn=d))
+    return S.comparable(S.finalize(state))
+
+
+def load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("bench,scale", CASES)
+def test_matrix_bitexact_and_golden(bench, scale):
+    w = make_workload(bench, scale=scale)
+    results = {m: run_mode(w, m) for m in ("seq", "vmap")}
+    if len(jax.devices()) >= 2:
+        n_dev = max(d for d in range(2, len(jax.devices()) + 1)
+                    if TINY.n_sm % d == 0)
+        results[f"shard{n_dev}"] = run_shard(w, n_dev)
+    ref = results["vmap"]
+    for mode, got in results.items():
+        assert got == ref, f"mode {mode} diverged: {got} != {ref}"
+    golden = load_golden()[f"{bench}@{scale}"]
+    assert ref == golden, (
+        f"stats drifted from committed golden for {bench}@{scale} — if the "
+        f"timing model changed intentionally, regenerate with --regen.\n"
+        f"got:    {ref}\ngolden: {golden}")
+
+
+def test_golden_covers_all_cases():
+    golden = load_golden()
+    assert set(golden) == {f"{b}@{s}" for b, s in CASES}
+    for stats in golden.values():
+        # exactly the comparable key set, no extras and none missing
+        assert S.comparable(stats) == stats
+
+
+def _regen():
+    golden = {}
+    for bench, scale in CASES:
+        w = make_workload(bench, scale=scale)
+        seq, vm = run_mode(w, "seq"), run_mode(w, "vmap")
+        assert seq == vm, (bench, seq, vm)
+        golden[f"{bench}@{scale}"] = vm
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()

@@ -1,7 +1,7 @@
 """Memory-system unit tests: the max-plus queueing recurrence is exact."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.sim.memsys import _lex_sort, _seg_maxplus
 

@@ -1,0 +1,115 @@
+"""Memory-system invariants, property-tested two ways: seeded random
+request tables straight into ``mem_phase`` (always run), plus a
+hypothesis-driven variant when the package is installed (_hyp shim).
+
+Invariants:
+  · request stages only advance inside the memory phase (0/3 untouched,
+    1 → {2,3}, 2 → 3) and response times strictly increase on advance;
+  · in-flight MSHR rows per SM never exceed ``mshr_per_sm`` and non-store
+    in-flight rows account exactly for the warps' pending-load counters;
+  · the machine clock is strictly monotone: +Δ per quantum, busy_until
+    recurrences never rewind, done_cycle latches once.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.core.engine import quantum_step
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import TINY, split_config
+from repro.sim.memsys import mem_phase
+from repro.sim.state import init_state
+from repro.workloads import make_workload
+
+SCFG, DYN = split_config(TINY)
+
+
+def random_mem_inputs(rng, t0=64):
+    ns, m = SCFG.n_sm, SCFG.mshr_per_sm
+    state = init_state(SCFG)
+    req = {
+        "stage": jnp.asarray(rng.integers(0, 4, (ns, m)), jnp.int32),
+        "addr": jnp.asarray(rng.integers(0, 4096, (ns, m)), jnp.int32),
+        "t": jnp.asarray(rng.integers(0, t0 + 2 * SCFG.quantum, (ns, m)),
+                         jnp.int32),
+        "warp": jnp.zeros((ns, m), jnp.int32),
+        "is_store": jnp.asarray(rng.integers(0, 2, (ns, m)) == 1),
+    }
+    return req, state["mem"], state["stats"]
+
+
+def check_mem_phase_invariants(req, mem, stats, t0):
+    req2, mem2, _ = mem_phase(req, mem, stats, t0, SCFG, DYN)
+    s0 = np.asarray(req["stage"])
+    s1 = np.asarray(req2["stage"])
+    t_before = np.asarray(req["t"])
+    t_after = np.asarray(req2["t"])
+    assert ((s1 >= 0) & (s1 <= 3)).all()
+    # stages only advance; free (0) and done (3) rows are never touched
+    assert (s1 >= s0).all(), "mem_phase moved a request backwards"
+    assert (s1[s0 == 0] == 0).all() and (s1[s0 == 3] == 3).all()
+    adv = s1 > s0
+    assert (t_after[adv] > t_before[adv]).all(), \
+        "advancing a request must move its event time forward"
+    assert (t_after[~adv] == t_before[~adv]).all()
+    # queue recurrences never rewind
+    for k in ("l2_busy", "dram_busy"):
+        assert (np.asarray(mem2[k]) >= np.asarray(mem[k])).all()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mem_phase_invariants_seeded(seed):
+    rng = np.random.default_rng(seed)
+    t0 = int(rng.integers(0, 8)) * SCFG.quantum
+    req, mem, stats = random_mem_inputs(rng, t0=max(t0, SCFG.quantum))
+    check_mem_phase_invariants(req, mem, stats, t0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1 << 16))
+def test_mem_phase_invariants_property(seed):
+    rng = np.random.default_rng(seed)
+    req, mem, stats = random_mem_inputs(rng)
+    check_mem_phase_invariants(req, mem, stats, t0=64)
+
+
+def _quantum_trajectory(n_steps=40):
+    """Step the full engine unrolled, yielding state after every quantum."""
+    trace = make_workload("hotspot", scale=0.01).kernels[0].pack()
+    runner = make_sm_runner(SCFG, "vmap")
+    step = jax.jit(lambda s: quantum_step(s, trace, SCFG, DYN, runner))
+    state = init_state(SCFG)
+    out = [state]
+    for _ in range(n_steps):
+        state = step(state)
+        out.append(state)
+    return out
+
+
+def test_mshr_bounded_and_pending_accounted():
+    traj = _quantum_trajectory()
+    saw_inflight = False
+    for state in traj:
+        stage = np.asarray(state["req"]["stage"])
+        is_store = np.asarray(state["req"]["is_store"])
+        inflight = (stage != 0).sum(axis=1)
+        assert (inflight <= SCFG.mshr_per_sm).all()
+        saw_inflight |= bool((inflight > 0).any())
+        # each non-store in-flight row is exactly one pending load unit
+        pending = np.asarray(state["warp"]["pending"]).sum(axis=1)
+        loads = ((stage != 0) & ~is_store).sum(axis=1)
+        assert (pending == loads).all(), (pending, loads)
+    assert saw_inflight, "workload never exercised the MSHRs"
+
+
+def test_cycle_strictly_monotone_and_done_latches():
+    traj = _quantum_trajectory()
+    cycles = [int(s["ctrl"]["cycle"]) for s in traj]
+    deltas = np.diff(cycles)
+    assert (deltas == SCFG.quantum).all(), "clock must advance by Δ/quantum"
+    done = [int(s["ctrl"]["done_cycle"]) for s in traj]
+    latched = [d for d in done if d >= 0]
+    assert all(a == latched[0] for a in latched), "done_cycle must latch once"

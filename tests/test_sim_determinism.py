@@ -7,7 +7,7 @@ the sequential (lax.map) and vectorized (vmap) SM runners.  The sharded
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import stats as S
 from repro.core.engine import simulate

@@ -14,19 +14,21 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    import json, jax, jax.numpy as jnp
+    import json, jax
     from functools import partial
-    from repro.sim.config import TINY
-    from repro.core.engine import simulate
+    from repro.sim.config import TINY, split_config
+    from repro.core.engine import run_workload, simulate
     from repro.core.parallel import (make_sm_runner, run_kernel_sharded,
                                      sm_permutation, permute_state)
     from repro.launch.mesh import make_host_mesh
     from repro.core import stats as S
-    from repro.sim.state import init_state, reset_for_kernel
+    from repro.sim.state import init_state
     from repro.workloads import make_workload
 
     cfg = TINY
+    scfg, dyn = split_config(cfg)
     w = make_workload("sssp", scale=0.03)
+    packed = [k.pack() for k in w.kernels]
     ref = S.comparable(S.finalize(simulate(
         w, cfg, make_sm_runner(cfg, "vmap"), max_cycles=1<<15)))
     results = {"ref": ref}
@@ -34,18 +36,11 @@ SCRIPT = textwrap.dedent("""
         for exchange in ("window", "cycle"):
             mesh = make_host_mesh(4, "sm")
             perm = sm_permutation(cfg, 4, policy)
-            state = permute_state(init_state(cfg), perm)
             runner = jax.jit(partial(run_kernel_sharded, cfg=cfg, mesh=mesh,
                                      max_cycles=1<<15, exchange=exchange))
-            total = jnp.zeros((), jnp.int32)
-            for k in w.kernels:
-                state = reset_for_kernel(state, cfg)
-                state = runner(state, k.pack())
-                kc = jnp.where(state["ctrl"]["done_cycle"] >= 0,
-                               state["ctrl"]["done_cycle"],
-                               state["ctrl"]["cycle"])
-                total = total + kc
-            state["ctrl"]["total_cycles"] = total
+            state = run_workload(
+                permute_state(init_state(cfg), perm), packed, scfg, dyn,
+                kernel_runner=lambda st, k, d: runner(st, k, dyn=d))
             results[f"{policy}/{exchange}"] = S.comparable(S.finalize(state))
     print(json.dumps(results))
 """)
