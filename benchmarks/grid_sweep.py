@@ -1,0 +1,90 @@
+"""Grid-sweep throughput: (workload × config) lanes in ONE compiled
+program vs a Python loop of solo workload programs.
+
+The batched path pads + stacks W zoo workloads (core/batch.py), vmaps
+them against C configs and dispatches one XLA program for the whole grid;
+the loop path runs W jitted solo programs (dyn traced, so each workload
+compiles once and serves all its configs) but pays W×C sequential device
+dispatches.  Reports (workload×config)-lanes/sec for both and the
+speedup.  Emits JSON into experiments/bench/ like the other benchmarks.
+
+Caveat the numbers honestly: vmap lanes advance in lock-step, so every
+lane pays the slowest lane's quantum count.  On a single CPU core with
+cycle-skewed zoo workloads that straggler tax can make the batched grid
+SLOWER than the loop (speedup < 1); the batched form wins on parallel
+backends and on homogeneous lanes (cf. the dse benchmark, where all
+lanes share one workload).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
+from repro.core.batch import stack_kernels, stack_workloads
+from repro.core.engine import run_workload_stacked
+from repro.core.parallel import make_sm_runner
+from repro.core.sweep import make_grid_runner, stack_dyn
+from repro.launch.dse import default_grid
+from repro.sim.config import TINY, split_config
+from repro.sim.state import init_state
+from repro.sim.workloads import zoo_names, zoo_workload
+
+N_WORKLOADS = 4
+N_CONFIGS = 4
+
+
+def run() -> list[dict]:
+    names = zoo_names()[:N_WORKLOADS]
+    workloads = [zoo_workload(n, scale=SIM_SCALE) for n in names]
+    cfgs = default_grid(TINY, N_CONFIGS)
+    scfg, dyn_batch = stack_dyn(cfgs)
+    stacked = stack_workloads(workloads)
+    max_cycles = min(MAX_CYCLES, 1 << 15)
+    lanes = N_WORKLOADS * N_CONFIGS
+
+    batched = make_grid_runner(scfg, max_cycles=max_cycles)
+    t_batch = timeit(
+        lambda: jax.block_until_ready(batched(stacked, dyn_batch)),
+        warmup=1, iters=3)
+
+    # loop path: one jitted program PER workload (its own stacked shape),
+    # dyn traced so all C configs share that compilation
+    sm_runner = make_sm_runner(scfg, "vmap")
+    solos = []
+    for w in workloads:
+        wk = stack_kernels([k.pack() for k in w.kernels])
+        solos.append(jax.jit(
+            lambda dyn, wk=wk: run_workload_stacked(
+                init_state(scfg), wk, scfg, dyn, sm_runner, max_cycles)))
+    dyns = [split_config(cfg)[1] for cfg in cfgs]
+
+    def loop():
+        outs = [solo(d)["ctrl"]["total_cycles"]
+                for solo in solos for d in dyns]
+        jax.block_until_ready(outs)
+        return outs
+
+    t_loop = timeit(loop, warmup=1, iters=3)
+
+    rows = [{
+        "name": f"grid/batched_{N_WORKLOADS}x{N_CONFIGS}",
+        "us_per_call": t_batch * 1e6,
+        "derived": f"lanes_per_s={lanes / t_batch:.2f}",
+    }, {
+        "name": f"grid/loop_{N_WORKLOADS}x{N_CONFIGS}",
+        "us_per_call": t_loop * 1e6,
+        "derived": (f"lanes_per_s={lanes / t_loop:.2f} "
+                    f"speedup={t_loop / t_batch:.2f}x"),
+    }]
+    save_json("grid_sweep", {
+        "n_workloads": N_WORKLOADS, "n_configs": N_CONFIGS,
+        "workloads": names, "scale": SIM_SCALE, "max_cycles": max_cycles,
+        "t_batched_s": t_batch, "t_loop_s": t_loop,
+        "speedup": t_loop / t_batch,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

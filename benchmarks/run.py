@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.
   fig7  — CTAs per kernel                                   (paper Fig. 7)
   det   — determinism across modes/devices/schedulers       (paper §1/§3)
   dse   — batched config sweep vs solo-run loop             (DSE layer)
+  grid  — batched workloads × configs grid vs solo loop     (zoo frontend)
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
@@ -20,15 +21,15 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: fig1 fig5 fig6 fig7 det dse roofline "
-                         "kernels")
+                    help="subset: fig1 fig5 fig6 fig7 det dse grid "
+                         "roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     args = ap.parse_args()
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
-                            kernels_bench, roofline)
+                            grid_sweep, kernels_bench, roofline)
 
     suites = {
         "fig7": fig7_ctas.run,
@@ -39,6 +40,7 @@ def main() -> None:
         "fig5": (lambda: fig5_speedup.run(measure_shard=not args.fast)),
         "det": determinism.run,
         "dse": dse_sweep.run,
+        "grid": grid_sweep.run,
     }
     rows = []
     failed = False

@@ -1,0 +1,98 @@
+"""Trace batching: pad + stack kernel traces so whole workloads vmap.
+
+The engine reads a packed kernel trace through two traced scalars —
+``n_instr`` (instruction fetch is clipped to ``pc < n_instr``) and
+``n_ctas`` (dispatch stops at ``next_cta >= n_ctas``) — so a trace can be
+padded without changing a single simulated event:
+
+  · **NOP slots**: instruction arrays grow to a shared ``n_instr_max``;
+    the pad region (op 0, no dep, no address) is never fetched because
+    every read site clips/gates on the kernel's own ``n_instr``.
+  · **Empty kernels**: a workload grows to a shared kernel count with
+    ``n_ctas=0`` kernels; the engine's scan body masks them out entirely
+    (state passes through, 0 cycles charged — core/engine.py).
+
+After padding, every kernel of every workload shares one array shape, so
+kernels stack into a leading scan axis (``stack_kernels``) and whole
+workloads stack into a leading *workload-lane* axis (``stack_workloads``)
+— the axis ``core/sweep.py:grid_sweep`` vmaps over.  Padding is proven
+inert by tests/test_batch_padding.py (padded vs unpadded bit-exact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# per-instruction (length-L) fields of a packed kernel trace; everything
+# else in the pack dict is a scalar (n_ctas, warps_per_cta, n_instr)
+INSTR_FIELDS = ("ops", "dep", "addr_mode", "addr_param")
+
+
+def pad_packed(packed: dict, n_instr_max: int) -> dict:
+    """Pad a packed kernel's instruction arrays to ``n_instr_max`` with
+    inert NOP slots.  ``n_instr`` keeps the TRUE length, so the pad region
+    is unreachable (pc never enters it, fetch clips below it)."""
+    length = int(packed["ops"].shape[0])
+    if length > n_instr_max:
+        raise ValueError(
+            f"kernel has {length} instructions > n_instr_max={n_instr_max}")
+    out = dict(packed)
+    for f in INSTR_FIELDS:
+        out[f] = jnp.pad(packed[f], (0, n_instr_max - length))
+    return out
+
+
+def empty_packed(n_instr_max: int) -> dict:
+    """An ``n_ctas=0`` kernel: dispatches nothing, runs nothing.  Used to
+    pad workloads to a shared kernel count; the engine scan charges it 0
+    cycles and passes state through untouched."""
+    i32 = jnp.int32
+    return {
+        "ops": jnp.zeros((n_instr_max,), i32),
+        "dep": jnp.zeros((n_instr_max,), jnp.bool_),
+        "addr_mode": jnp.zeros((n_instr_max,), i32),
+        "addr_param": jnp.zeros((n_instr_max,), i32),
+        "n_ctas": jnp.zeros((), i32),
+        "warps_per_cta": jnp.ones((), i32),   # never 0: used as a divisor
+        "n_instr": jnp.zeros((), i32),
+    }
+
+
+def stack_kernels(kernels: list, n_instr: int | None = None,
+                  n_kernels: int | None = None) -> dict:
+    """Pad packed kernels to shared (n_kernels, n_instr) and stack them
+    into a leading kernel axis — the axis the engine's ``lax.scan`` runs
+    over.  Returns a pytree whose leaves have leading dim ``n_kernels``."""
+    if not kernels:
+        raise ValueError("empty kernel list")
+    lengths = [int(k["ops"].shape[0]) for k in kernels]
+    if n_instr is None:
+        n_instr = max(lengths)
+    if n_kernels is None:
+        n_kernels = len(kernels)
+    if len(kernels) > n_kernels:
+        raise ValueError(
+            f"{len(kernels)} kernels > n_kernels={n_kernels}")
+    padded = [pad_packed(k, n_instr) for k in kernels]
+    padded += [empty_packed(n_instr)] * (n_kernels - len(kernels))
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def stack_workloads(workloads: list) -> dict:
+    """Stack whole workloads into a leading workload-lane axis.
+
+    Every kernel of every workload is padded to the global
+    (max kernel count, max instruction count); leaves come out shaped
+    ``(n_workloads, n_kernels, ...)`` — vmap axis 0 for a multi-workload
+    sweep, scan axis 1 inside each lane.
+    """
+    if not workloads:
+        raise ValueError("empty workload list")
+    packs = [[k.pack() for k in w.kernels] for w in workloads]
+    if any(not p for p in packs):
+        raise ValueError("workload with no kernels")
+    n_kernels = max(len(p) for p in packs)
+    n_instr = max(int(k["ops"].shape[0]) for p in packs for k in p)
+    stacks = [stack_kernels(p, n_instr=n_instr, n_kernels=n_kernels)
+              for p in packs]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacks)

@@ -14,10 +14,14 @@ shapes) and the ``dyn`` pytree of traced timing parameters separately.  All
 timing numerics enter the compiled program as *arguments*, never as Python
 constants, so ``core/sweep.py`` can vmap the whole engine over a batch of
 dynamic configs (one design-space-exploration lane per config).
+
+Kernel threading: a workload's kernels are padded + stacked
+(core/batch.py) and run by a ``lax.scan`` over the kernel axis
+(``run_workload_stacked``) — the whole workload is ONE traced program, so
+``core/sweep.py:grid_sweep`` can additionally vmap over a stacked batch
+of *workloads* (benchmarks × configs in one compiled call).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -72,41 +76,96 @@ def kernel_cycles(ctrl: dict):
                      ctrl["cycle"])
 
 
+def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
+                         dyn: dict, sm_runner, max_cycles: int = 1 << 20,
+                         state_transform=None) -> dict:
+    """Run a whole workload as ONE traced program: ``lax.scan`` over the
+    stacked kernel axis (core/batch.py:stack_kernels).
+
+    Per scan step: traced state reset (sim/state.py:reset_for_kernel),
+    run the kernel to completion, accumulate its cycles.  Padding kernels
+    (``n_ctas == 0``) are masked out — the carried state passes through
+    unchanged and 0 cycles are charged — so a workload padded to a shared
+    kernel count is bit-identical to its unpadded self.  A kernel that
+    hits ``max_cycles`` (``done_cycle`` still < 0) bumps the ``timeouts``
+    counter so truncated runs are reported, not silently counted as
+    complete (core/stats.py:finalize → ``timeout``).
+
+    Being a single traced function of (state, stacked, dyn), this is what
+    ``core/sweep.py`` vmaps over workload and config lanes.
+    """
+    zero = jnp.zeros((), jnp.int32)
+
+    def body(carry, packed):
+        prev, total, timeouts = carry
+        st = reset_for_kernel(prev, cfg)
+        if state_transform is not None:
+            st = state_transform(st)
+        st = run_kernel(st, packed, cfg, dyn, sm_runner, max_cycles)
+        empty = packed["n_ctas"] == 0
+        total = total + jnp.where(empty, 0, kernel_cycles(st["ctrl"]))
+        timeouts = timeouts + jnp.where(
+            ~empty & (st["ctrl"]["done_cycle"] < 0), 1, 0)
+        nxt = jax.tree_util.tree_map(
+            lambda old, new: jnp.where(empty, old, new), prev, st)
+        return (nxt, total, timeouts), None
+
+    (state, total, timeouts), _ = jax.lax.scan(
+        body, (state, zero, zero), stacked)
+    return dict(state, ctrl=dict(state["ctrl"], total_cycles=total,
+                                 timeouts=timeouts))
+
+
 def run_workload(state: dict, kernels: list, cfg: StaticConfig, dyn: dict,
                  sm_runner=None, max_cycles: int = 1 << 20,
                  state_transform=None, kernel_runner=None) -> dict:
     """Run packed kernels back-to-back, accumulating total cycles.
 
-    With the default kernel_runner this is a pure traced function of
-    (state, dyn): jit it once, or vmap it over a stacked ``dyn`` batch for
-    a design-space sweep (core/sweep.py).  Pass ``kernel_runner`` —
-    ``(state, packed, dyn) -> state`` — to substitute a pre-jitted or
-    sharded per-kernel step while keeping this accounting loop shared.
+    Default path: the kernel list is padded + stacked (core/batch.py) and
+    handed to ``run_workload_stacked`` — one ``lax.scan``, one compiled
+    kernel body regardless of kernel count; a pure traced function of
+    (state, dyn) that core/sweep.py jits/vmaps whole.  Pass
+    ``kernel_runner`` — ``(state, packed, dyn) -> state`` — to substitute
+    a pre-jitted or sharded per-kernel step; that path keeps the host
+    loop (per-kernel device programs) but shares the same accounting,
+    including the ``timeouts`` truncation counter.
     """
     if kernel_runner is None:
-        def kernel_runner(st, packed, d):
-            return run_kernel(st, packed, cfg, d, sm_runner, max_cycles)
+        from repro.core.batch import stack_kernels
+        return run_workload_stacked(state, stack_kernels(kernels), cfg, dyn,
+                                    sm_runner, max_cycles, state_transform)
     total_cycles = jnp.zeros((), jnp.int32)
+    timeouts = jnp.zeros((), jnp.int32)
     for packed in kernels:
         state = reset_for_kernel(state, cfg)
         if state_transform is not None:
             state = state_transform(state)
         state = kernel_runner(state, packed, dyn)
         total_cycles = total_cycles + kernel_cycles(state["ctrl"])
+        timeouts = timeouts + jnp.where(state["ctrl"]["done_cycle"] < 0,
+                                        1, 0)
     state["ctrl"]["total_cycles"] = total_cycles
+    state["ctrl"]["timeouts"] = timeouts
     return state
 
 
 def simulate(workload: Workload, cfg: GPUConfig, sm_runner,
              max_cycles: int = 1 << 20, jit: bool = True,
              state_transform=None) -> dict:
-    """Run all kernels of a workload; returns the final state."""
+    """Run all kernels of a workload; returns the final state.
+
+    The whole workload — state init, per-kernel reset, every kernel's
+    quantum loop — is one traced program (``lax.scan`` over the stacked
+    kernel axis), jitted once."""
+    from repro.core.batch import stack_kernels
+
     scfg, dyn = split_config(cfg)
-    runner = partial(run_kernel, cfg=scfg, sm_runner=sm_runner,
-                     max_cycles=max_cycles)
+    stacked = stack_kernels([k.pack() for k in workload.kernels])
+
+    def run(d):
+        return run_workload_stacked(init_state(scfg), stacked, scfg, d,
+                                    sm_runner, max_cycles, state_transform)
+
     if jit:
-        runner = jax.jit(runner)
-    return run_workload(
-        init_state(scfg), [k.pack() for k in workload.kernels], scfg, dyn,
-        state_transform=state_transform,
-        kernel_runner=lambda st, packed, d: runner(st, packed, dyn=d))
+        run = jax.jit(run)
+    return run(dyn)

@@ -20,6 +20,11 @@ def finalize(state: dict) -> dict:
         out[k] = int(v)
     out["cycles"] = int(state["ctrl"].get("total_cycles",
                                           state["ctrl"]["cycle"]))
+    # truncation accounting: kernels that hit max_cycles before finishing
+    # (engine.run_workload* count them; done_cycle stayed negative).  Kept
+    # out of comparable() — it is run-harness metadata, not timing state.
+    out["timeouts"] = int(state["ctrl"].get("timeouts", 0))
+    out["timeout"] = out["timeouts"] > 0
     # set-valued stat: union of per-SM address sets
     aset = np.asarray(state["sm"]["addrset"]).ravel()
     out["unique_addrs"] = int(np.unique(aset[aset >= 0]).size)

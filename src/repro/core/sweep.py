@@ -9,10 +9,20 @@ solo run of that config (tests/test_dse_sweep.py): JAX's while_loop batching
 rule keeps finished lanes frozen via select, so early-finishing configs are
 unaffected by stragglers.
 
+With the trace-batching frontend (core/batch.py) the same trick applies to
+the *workload* axis: whole workloads are padded + stacked into a leading
+workload-lane axis, and ``grid_sweep(workloads, cfgs)`` runs the full
+benchmarks × configs grid as ONE ``jit(vmap(vmap(run_workload_stacked)))``
+program — every (workload, config) lane bit-identical to its solo run
+(tests/test_zoo_grid.py; ``python -m repro.launch.zoo --grid 4 4 --check``).
+
 Usage:
     cfgs = [dataclasses.replace(TINY, l2_lat=v) for v in (16, 32, 64, ...)]
     result = sweep(workload, cfgs)
     result.stats  # list of per-config finalized stat dicts
+
+    grid = grid_sweep([zoo_workload(n) for n in zoo_names()[:4]], cfgs)
+    grid.stats[w][c]  # workload-major grid of finalized stat dicts
 """
 from __future__ import annotations
 
@@ -22,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import stats as S
-from repro.core.engine import run_workload
+from repro.core.batch import stack_workloads
+from repro.core.engine import run_workload, run_workload_stacked
 from repro.core.parallel import make_sm_runner
 from repro.sim.config import StaticConfig, split_config
 from repro.sim.state import init_state
@@ -92,3 +103,65 @@ def sweep(workload: Workload, cfgs, mode: str = "vmap",
     n = len(cfgs)
     stats = [S.finalize(take_lane(bstate, i)) for i in range(n)]
     return SweepResult(scfg=scfg, state=bstate, n=n, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# grid sweep: benchmarks × configs in one compiled program
+# ---------------------------------------------------------------------------
+
+def make_grid_runner(scfg: StaticConfig, mode: str = "vmap",
+                     max_cycles: int = 1 << 20):
+    """One compiled program for a whole (workload × config) grid:
+    ``(stacked_workloads, dyn_batch) -> final state`` with two leading
+    lane axes (workload-major).  The inner vmap runs every config lane of
+    one workload; the outer vmap runs every workload lane — all of it one
+    XLA program, one dispatch per quantum for the entire grid."""
+    sm_runner = make_sm_runner(scfg, mode)
+
+    def run_one(stacked, dyn):
+        return run_workload_stacked(init_state(scfg), stacked, scfg, dyn,
+                                    sm_runner, max_cycles)
+
+    over_cfgs = jax.vmap(run_one, in_axes=(None, 0))
+    return jax.jit(jax.vmap(over_cfgs, in_axes=(0, None)))
+
+
+def take_grid_lane(batched_state: dict, w: int, c: int) -> dict:
+    """Slice lane (workload ``w``, config ``c``) out of a grid state."""
+    return jax.tree_util.tree_map(lambda x: x[w, c], batched_state)
+
+
+@dataclass
+class GridResult:
+    scfg: StaticConfig
+    state: dict          # final state, leading (workload, config) lane axes
+    names: list          # workload names, grid row order
+    n_workloads: int
+    n_cfgs: int
+    stats: list = field(default_factory=list)   # stats[w][c] finalized dict
+
+    def table(self, keys=("cycles", "ipc", "l1_miss", "l2_miss",
+                          "dram_req")) -> list:
+        return [{"workload": self.names[w], "cfg": c,
+                 **{k: self.stats[w][c][k] for k in keys}}
+                for w in range(self.n_workloads)
+                for c in range(self.n_cfgs)]
+
+
+def grid_sweep(workloads, cfgs, mode: str = "vmap",
+               max_cycles: int = 1 << 20) -> GridResult:
+    """Simulate every workload under every config — W×C lanes, ONE
+    compiled call.  Workloads are padded to shared (kernel count,
+    instruction count) with inert kernels/NOP slots (core/batch.py), so
+    each lane is bit-identical to a solo ``simulate()`` of that
+    (workload, config) pair."""
+    scfg, dyn_batch = stack_dyn(cfgs)
+    stacked = stack_workloads(workloads)
+    runner = make_grid_runner(scfg, mode, max_cycles)
+    bstate = jax.block_until_ready(runner(stacked, dyn_batch))
+    nw, nc = len(workloads), len(cfgs)
+    stats = [[S.finalize(take_grid_lane(bstate, w, c)) for c in range(nc)]
+             for w in range(nw)]
+    return GridResult(scfg=scfg, state=bstate,
+                      names=[w.name for w in workloads],
+                      n_workloads=nw, n_cfgs=nc, stats=stats)

@@ -1,0 +1,106 @@
+"""Workload-zoo launcher — list the zoo, run one workload, or sweep a
+whole benchmarks × configs grid as ONE compiled program.
+
+  python -m repro.launch.zoo --list
+  python -m repro.launch.zoo --run random_gather --scale 0.05
+  python -m repro.launch.zoo --grid 4 4 --check     # W×C lanes vs solo
+
+``--grid W C`` takes the first W zoo workloads (registry order) and a
+C-point config grid (launch/dse.py:default_grid — L2 latency × scheduler)
+and runs the full grid in one ``jit(vmap(vmap(...)))`` call
+(core/sweep.py:grid_sweep).  ``--check`` reruns every (workload, config)
+pair solo and asserts the grid lane is bit-identical — including lanes
+whose workload was padded with NOP slots / empty kernels (core/batch.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.core.sweep import grid_sweep
+from repro.launch.dse import BASES, default_grid
+from repro.sim.workloads import zoo_names, zoo_workload
+
+
+def lane_signature(stats: dict) -> dict:
+    """What --check compares: the cross-mode-comparable stats plus the
+    truncation counter (a grid lane must also time out exactly when its
+    solo run does)."""
+    return dict(S.comparable(stats), timeouts=stats["timeouts"])
+
+
+def run_grid(args) -> None:
+    n_w, n_c = args.grid
+    names = zoo_names()
+    if n_w > len(names):
+        raise SystemExit(f"--grid {n_w} exceeds zoo size {len(names)}")
+    base = BASES[args.base]
+    workloads = [zoo_workload(n, scale=args.scale) for n in names[:n_w]]
+    cfgs = default_grid(base, n_c)
+
+    t0 = time.time()
+    grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles)
+    wall = time.time() - t0
+    print(json.dumps(grid.table(), indent=1))
+    lanes = n_w * n_c
+    print(f"[zoo] grid {n_w} workloads × {n_c} configs = {lanes} lanes: "
+          f"one compiled call, wall={wall:.1f}s "
+          f"({lanes / max(wall, 1e-9):.2f} lanes/s)")
+
+    if args.check:
+        for w in range(n_w):
+            runner = make_sm_runner(grid.scfg, "vmap")
+            for c, cfg in enumerate(cfgs):
+                solo = lane_signature(S.finalize(simulate(
+                    workloads[w], cfg, runner,
+                    max_cycles=args.max_cycles)))
+                lane = lane_signature(grid.stats[w][c])
+                assert lane == solo, (grid.names[w], c, lane, solo)
+        print(f"[zoo] check OK: all {lanes} lanes bit-exact vs solo runs")
+
+
+def run_one(args) -> None:
+    w = zoo_workload(args.run, scale=args.scale)
+    cfg = BASES[args.base]
+    t0 = time.time()
+    st = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
+                  max_cycles=args.max_cycles)
+    out = S.finalize(st)
+    print(json.dumps(dict(S.comparable(out), ipc=out["ipc"],
+                          timeouts=out["timeouts"]), indent=1))
+    flag = " [TIMEOUT: truncated at max_cycles]" if out["timeout"] else ""
+    print(f"[zoo] {w.name}: {out['cycles']} GPU cycles, ipc={out['ipc']}, "
+          f"wall={time.time() - t0:.1f}s{flag}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="list zoo workload names")
+    ap.add_argument("--run", default="", help="simulate one zoo workload")
+    ap.add_argument("--grid", nargs=2, type=int, metavar=("W", "C"),
+                    help="sweep first W workloads × C configs, one program")
+    ap.add_argument("--base", choices=sorted(BASES), default="tiny")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--max-cycles", type=int, default=1 << 15)
+    ap.add_argument("--check", action="store_true",
+                    help="with --grid: verify every lane vs a solo run")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for n in zoo_names():
+            print(n)
+    elif args.grid:
+        run_grid(args)
+    elif args.run:
+        run_one(args)
+    else:
+        raise SystemExit("pick one of --list / --run NAME / --grid W C")
+
+
+if __name__ == "__main__":
+    main()

@@ -42,8 +42,15 @@ def _seg_maxplus(seg_start, service, arrival):
 def _lex_sort(primary, secondary, tertiary, valid):
     """argsort by (primary, secondary, tertiary), invalid rows last.
     int32-safe two-pass stable lexsort (no x64 in this environment):
-    secondary (< 2^19 cycles) and tertiary (< 2^12 rows) pack into one key;
-    a second stable pass orders by primary."""
+    secondary and tertiary (< 2^12 rows) pack into one key; a second
+    stable pass orders by primary.
+
+    ``secondary`` must be SMALL — callers pass the *quantum-relative*
+    event time ``t - t0`` (every valid row satisfies t0 ≤ t < t0 + Δ, so
+    it lies in [0, Δ)), never the absolute cycle: an absolute time (up to
+    2^20+ cycles) times the row count overflows the packed int32 key on
+    long runs and silently scrambles the service order
+    (tests/test_memsys.py:test_mem_phase_time_shift_invariance)."""
     r = tertiary.shape[0]
     k2 = secondary * r + tertiary
     k2 = jnp.where(valid, k2, BIG)
@@ -78,7 +85,7 @@ def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: StaticConfig,
     # ---------------- stage 1: arrival at L2 slices -------------------------
     sel1 = (stage == 1) & (t < horizon)
     slc = addr % cfg.l2_slices
-    order = _lex_sort(slc, t, rid, sel1)
+    order = _lex_sort(slc, t - t0, rid, sel1)
     o_sel = sel1[order]
     o_slc = jnp.where(o_sel, slc[order], cfg.l2_slices)
     o_t = t[order]
@@ -136,7 +143,7 @@ def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: StaticConfig,
     # ---------------- stage 2: DRAM channels --------------------------------
     sel2 = (stage == 2) & (t < horizon)
     ch = (addr % cfg.l2_slices) * cfg.dram_channels // cfg.l2_slices
-    order2 = _lex_sort(ch, t, rid, sel2)
+    order2 = _lex_sort(ch, t - t0, rid, sel2)
     o_sel2 = sel2[order2]
     o_ch = jnp.where(o_sel2, ch[order2], cfg.dram_channels)
     o_t2 = t[order2]

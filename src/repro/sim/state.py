@@ -88,7 +88,14 @@ def init_state(cfg: StaticConfig) -> dict:
 
 def reset_for_kernel(state: dict, cfg: StaticConfig) -> dict:
     """Between kernels: clear warps/requests, flush L1 (Accel-sim semantics),
-    keep L2/DRAM state and accumulated stats."""
+    keep L2/DRAM state and accumulated stats.
+
+    This is a pure traced function of ``state`` (the fresh arrays are
+    shape-only constants from ``init_state``) — it runs INSIDE the
+    engine's ``lax.scan`` over the stacked kernel axis
+    (core/engine.py:run_workload_stacked), so the kernel-to-kernel reset
+    is part of the one compiled workload program rather than a host-side
+    step between per-kernel dispatches."""
     s = init_state(cfg)
     new = {
         "warp": s["warp"],

@@ -1,4 +1,6 @@
+from repro.sim.workloads import zoo_names, zoo_workload
 from repro.workloads.lm_traces import arch_workload
 from repro.workloads.synthetic import ALL_BENCHMARKS, SUITES, make_workload
 
-__all__ = ["ALL_BENCHMARKS", "SUITES", "make_workload", "arch_workload"]
+__all__ = ["ALL_BENCHMARKS", "SUITES", "make_workload", "arch_workload",
+           "zoo_names", "zoo_workload"]

@@ -1,0 +1,95 @@
+"""Trace-batching frontend: padding must be INERT.
+
+NOP instruction slots and empty (``n_ctas=0``) pad kernels exist only to
+give every workload one shared array shape — they must not change a
+single simulated event, a single cycle of accounting, or any stat.
+Also covers the ``timeout`` truncation flag (engine accounting).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stats as S
+from repro.core.batch import (empty_packed, pad_packed, stack_kernels,
+                              stack_workloads)
+from repro.core.engine import run_workload_stacked, simulate
+from repro.core.parallel import make_sm_runner
+from repro.sim.config import TINY, split_config
+from repro.sim.state import init_state
+from repro.sim.workloads import zoo_workload
+
+MAX_CYCLES = 1 << 15
+SCFG, DYN = split_config(TINY)
+RUNNER = make_sm_runner(TINY, "vmap")
+
+
+def run_stacked(stacked, max_cycles=MAX_CYCLES):
+    out = run_workload_stacked(init_state(SCFG), stacked, SCFG, DYN,
+                               RUNNER, max_cycles)
+    return jax.block_until_ready(out)
+
+
+def test_padded_equals_unpadded():
+    """Extra NOP slots + extra empty kernels: bit-identical final state
+    stats, cycles and timeout accounting."""
+    w = zoo_workload("mixed", scale=0.02)
+    packed = [k.pack() for k in w.kernels]
+    plain = run_stacked(stack_kernels(packed))
+    n_instr = max(int(k["ops"].shape[0]) for k in packed)
+    padded = run_stacked(stack_kernels(packed, n_instr=n_instr + 13,
+                                       n_kernels=len(packed) + 3))
+    a, b = S.finalize(plain), S.finalize(padded)
+    assert S.comparable(a) == S.comparable(b)
+    assert a["timeouts"] == b["timeouts"] == 0
+    assert int(plain["ctrl"]["total_cycles"]) == \
+        int(padded["ctrl"]["total_cycles"])
+
+
+def test_all_empty_lane_contributes_zero():
+    """A lane of nothing but pad kernels: 0 cycles, 0 timeouts, all-zero
+    stats, and state untouched (bit-identical to the initial state)."""
+    stacked = stack_kernels([empty_packed(8)] * 4)
+    out = run_stacked(stacked)
+    assert int(out["ctrl"]["total_cycles"]) == 0
+    assert int(out["ctrl"]["timeouts"]) == 0
+    st = S.finalize(out)
+    for k in ("issued", "ctas_launched", "l1_miss", "l2_miss", "dram_req",
+              "cycles"):
+        assert st[k] == 0, (k, st[k])
+    init = init_state(SCFG)
+    for part in ("warp", "sm", "req", "mem", "stats_sm", "stats"):
+        same = jax.tree_util.tree_map(
+            lambda a, b: bool(jnp.array_equal(a, b)), init[part], out[part])
+        assert all(jax.tree_util.tree_leaves(same)), part
+
+
+def test_pad_packed_rejects_shrink():
+    k = zoo_workload("streaming_copy", scale=0.02).kernels[0].pack()
+    with pytest.raises(ValueError, match="n_instr_max"):
+        pad_packed(k, int(k["ops"].shape[0]) - 1)
+
+
+def test_stack_workloads_shapes():
+    ws = [zoo_workload(n, scale=0.02)
+          for n in ("mixed", "streaming_copy", "reduction_tree")]
+    stacked = stack_workloads(ws)
+    n_k = max(len(w.kernels) for w in ws)
+    n_i = max(k.n_instr for w in ws for k in w.kernels)
+    assert stacked["ops"].shape == (len(ws), n_k, n_i)
+    assert stacked["n_ctas"].shape == (len(ws), n_k)
+    # pad kernels are flagged empty, real kernels keep their CTA counts
+    n_ctas = np.asarray(stacked["n_ctas"])
+    for i, w in enumerate(ws):
+        assert (n_ctas[i, :len(w.kernels)] > 0).all()
+        assert (n_ctas[i, len(w.kernels):] == 0).all()
+
+
+def test_timeout_flag_reported():
+    """A run truncated at max_cycles must say so instead of posing as
+    complete; an untruncated run must not."""
+    w = zoo_workload("random_gather", scale=0.02)
+    cut = S.finalize(simulate(w, TINY, RUNNER, max_cycles=TINY.quantum))
+    assert cut["timeout"] and cut["timeouts"] >= 1
+    full = S.finalize(simulate(w, TINY, RUNNER, max_cycles=MAX_CYCLES))
+    assert not full["timeout"] and full["timeouts"] == 0

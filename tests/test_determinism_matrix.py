@@ -27,8 +27,18 @@ from repro.workloads import make_workload
 
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "golden", "determinism_tiny.json")
-CASES = (("hotspot", 0.02), ("myocyte", 1.0))
+# "zoo:" prefix loads from the sweep-facing workload zoo (sim/workloads.py)
+# so the batched frontend — padding, kernel-axis scan, zoo generators — is
+# locked cross-mode and cross-PR alongside the Table-2 analogues.
+CASES = (("hotspot", 0.02), ("myocyte", 1.0), ("zoo:mixed", 0.03))
 MAX_CYCLES = 1 << 15
+
+
+def load_case(bench, scale):
+    if bench.startswith("zoo:"):
+        from repro.sim.workloads import zoo_workload
+        return zoo_workload(bench[len("zoo:"):], scale=scale)
+    return make_workload(bench, scale=scale)
 
 
 def run_mode(workload, mode):
@@ -57,7 +67,7 @@ def load_golden():
 
 @pytest.mark.parametrize("bench,scale", CASES)
 def test_matrix_bitexact_and_golden(bench, scale):
-    w = make_workload(bench, scale=scale)
+    w = load_case(bench, scale)
     results = {m: run_mode(w, m) for m in ("seq", "vmap")}
     if len(jax.devices()) >= 2:
         n_dev = max(d for d in range(2, len(jax.devices()) + 1)
@@ -84,7 +94,7 @@ def test_golden_covers_all_cases():
 def _regen():
     golden = {}
     for bench, scale in CASES:
-        w = make_workload(bench, scale=scale)
+        w = load_case(bench, scale)
         seq, vm = run_mode(w, "seq"), run_mode(w, "vmap")
         assert seq == vm, (bench, seq, vm)
         golden[f"{bench}@{scale}"] = vm

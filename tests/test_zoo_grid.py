@@ -1,0 +1,82 @@
+"""Zoo + grid-sweep frontend: the acceptance property.
+
+A ``grid_sweep`` over ≥4 zoo workloads × ≥4 configs runs as ONE jitted
+program; every (workload, config) lane — including lanes whose workload
+was padded with NOP slots / empty kernels to reach the shared shape —
+must be bit-identical to a solo ``simulate()`` of that pair, cycles,
+stats and timeout accounting alike.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.core.sweep import grid_sweep
+from repro.sim.config import TINY
+from repro.sim.workloads import ZOO, zoo_names, zoo_workload
+
+MAX_CYCLES = 1 << 15
+SCALE = 0.02
+
+# 4 workloads with deliberately different kernel counts and lengths, so
+# at least three of them are padded on both axes in the stacked batch
+GRID_WORKLOADS = ("gemm_tiled", "mixed", "reduction_tree", "streaming_copy")
+GRID_CFGS = [
+    TINY,
+    dataclasses.replace(TINY, scheduler="lrr"),
+    dataclasses.replace(TINY, l2_lat=64, dram_row_penalty=48),
+    dataclasses.replace(TINY, l1_hit_lat=16, icnt_lat=24, scheduler="lrr"),
+]
+
+
+def signature(stats):
+    return dict(S.comparable(stats), timeouts=stats["timeouts"])
+
+
+@pytest.fixture(scope="module")
+def grid():
+    ws = [zoo_workload(n, scale=SCALE) for n in GRID_WORKLOADS]
+    return ws, grid_sweep(ws, GRID_CFGS, max_cycles=MAX_CYCLES)
+
+
+@pytest.mark.parametrize("w", range(len(GRID_WORKLOADS)))
+@pytest.mark.parametrize("c", range(len(GRID_CFGS)))
+def test_grid_lane_equals_solo(grid, w, c):
+    ws, result = grid
+    cfg = GRID_CFGS[c]
+    solo = signature(S.finalize(simulate(
+        ws[w], cfg, make_sm_runner(cfg, "vmap"), max_cycles=MAX_CYCLES)))
+    assert signature(result.stats[w][c]) == solo
+
+
+def test_grid_lanes_are_distinct(grid):
+    """The grid really sweeps: no two workload rows collapse to one
+    result, and config columns differ within a row."""
+    _, result = grid
+    rows = [S.comparable(result.stats[w][0])
+            for w in range(len(GRID_WORKLOADS))]
+    assert len({tuple(sorted(r.items())) for r in rows}) == len(rows)
+    first = [S.comparable(result.stats[0][c]) for c in range(len(GRID_CFGS))]
+    assert len({tuple(sorted(r.items())) for r in first}) > 1
+
+
+def test_zoo_registry_complete():
+    """The zoo holds the advertised ~8 distinct workloads and every entry
+    builds a non-empty workload whose name matches its key."""
+    assert len(ZOO) >= 8
+    expected = {"gemm_tiled", "stencil", "streaming_copy",
+                "strided_transpose", "random_gather", "reduction_tree",
+                "tensor_heavy", "mixed"}
+    assert expected <= set(zoo_names())
+    for name in zoo_names():
+        w = zoo_workload(name, scale=0.02)
+        assert w.kernels, name
+        assert w.name == name
+        assert all(k.n_ctas >= 1 for k in w.kernels), name
+
+
+def test_zoo_unknown_name():
+    with pytest.raises(KeyError, match="unknown zoo workload"):
+        zoo_workload("nope")
