@@ -34,6 +34,38 @@ def save_json(name: str, payload: dict):
         json.dump(payload, f, indent=1, default=str)
 
 
+def git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True,
+                text=True, cwd=REPO, timeout=10).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            sha = ""
+    return sha or "unknown"
+
+
+def save_bench(suite: str, rows: list) -> str:
+    """Standardized perf-trajectory artifact: BENCH_<suite>.json with the
+    suite's rows plus the git sha and UTC date, so CI-uploaded artifacts
+    are comparable across commits.  Returns the file path."""
+    import datetime
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "rows": [{"name": r["name"], "us_per_call": r["us_per_call"],
+                  "derived": r["derived"]} for r in rows],
+        "git_sha": git_sha(),
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
 def run_shard_worker(workload: str, devices: int, policy: str = "static",
                      exchange: str = "window", scale: float = SIM_SCALE,
                      timeout: int = 900) -> dict:

@@ -1,5 +1,8 @@
 """Benchmark driver — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes a standardized
+``experiments/bench/BENCH_<suite>.json`` artifact per suite (schema:
+suite, rows[{name, us_per_call, derived}], git_sha, date) — the files CI
+uploads so the perf trajectory is comparable across commits.
 
   fig1  — single-thread simulation time per workload        (paper Fig. 1)
   fig5  — parallel speed-up vs thread/device count          (paper Fig. 5)
@@ -8,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.
   det   — determinism across modes/devices/schedulers       (paper §1/§3)
   dse   — batched config sweep vs solo-run loop             (DSE layer)
   grid  — batched workloads × configs grid vs solo loop     (zoo frontend)
+  mesh  — distributed grid sweep vs 2-D ('cfg','sm') mesh shape
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
@@ -21,7 +25,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: fig1 fig5 fig6 fig7 det dse grid "
+                    help="subset: fig1 fig5 fig6 fig7 det dse grid mesh "
                          "roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
@@ -29,7 +33,8 @@ def main() -> None:
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
-                            grid_sweep, kernels_bench, roofline)
+                            grid_sweep, kernels_bench, mesh_sweep, roofline)
+    from benchmarks.common import save_bench
 
     suites = {
         "fig7": fig7_ctas.run,
@@ -41,6 +46,7 @@ def main() -> None:
         "det": determinism.run,
         "dse": dse_sweep.run,
         "grid": grid_sweep.run,
+        "mesh": (lambda: mesh_sweep.run(fast=args.fast)),
     }
     rows = []
     failed = False
@@ -48,12 +54,14 @@ def main() -> None:
         if args.only and name not in args.only:
             continue
         try:
-            rows.extend(fn())
+            suite_rows = fn()
         except Exception:  # noqa: BLE001
             failed = True
             traceback.print_exc()
-            rows.append({"name": name, "us_per_call": -1.0,
-                         "derived": "ERROR"})
+            suite_rows = [{"name": name, "us_per_call": -1.0,
+                           "derived": "ERROR"}]
+        save_bench(name, suite_rows)
+        rows.extend(suite_rows)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -78,7 +78,7 @@ def kernel_cycles(ctrl: dict):
 
 def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
                          dyn: dict, sm_runner, max_cycles: int = 1 << 20,
-                         state_transform=None) -> dict:
+                         state_transform=None, kernel_runner=None) -> dict:
     """Run a whole workload as ONE traced program: ``lax.scan`` over the
     stacked kernel axis (core/batch.py:stack_kernels).
 
@@ -93,6 +93,13 @@ def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
 
     Being a single traced function of (state, stacked, dyn), this is what
     ``core/sweep.py`` vmaps over workload and config lanes.
+
+    ``kernel_runner`` — ``(state, packed, dyn) -> state`` — substitutes the
+    default ``run_kernel`` quantum loop with a custom traced one (e.g. the
+    SM-sharded step of core/distribute.py, where ``state``'s per-SM arrays
+    hold only this device's shard and ``cfg`` is the matching local-shape
+    StaticConfig).  The scan, per-kernel reset, empty-kernel masking and
+    timeout accounting stay shared across every execution mode.
     """
     zero = jnp.zeros((), jnp.int32)
 
@@ -101,7 +108,10 @@ def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
         st = reset_for_kernel(prev, cfg)
         if state_transform is not None:
             st = state_transform(st)
-        st = run_kernel(st, packed, cfg, dyn, sm_runner, max_cycles)
+        if kernel_runner is None:
+            st = run_kernel(st, packed, cfg, dyn, sm_runner, max_cycles)
+        else:
+            st = kernel_runner(st, packed, dyn)
         empty = packed["n_ctas"] == 0
         total = total + jnp.where(empty, 0, kernel_cycles(st["ctrl"]))
         timeouts = timeouts + jnp.where(

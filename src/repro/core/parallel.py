@@ -34,6 +34,14 @@ def make_sm_runner(cfg, mode: str = "vmap", mesh: Mesh = None):
 
     cfg may be a full GPUConfig or just its StaticConfig half — only static
     shape fields are closed over; all timing numerics flow in via ``dyn``.
+
+    mode='shard' needs a ``mesh`` with an 'sm' axis: the SM phase runs
+    under shard_map over that axis (each device vmaps its SM block), while
+    the serial region stays on the full replicated arrays in
+    ``engine.quantum_step`` — one entry point for every execution mode.
+    For the fully sharded quantum (serial region recomputed replicated
+    from an all-gather inside the shard region) see
+    ``make_sharded_quantum`` / ``core/distribute.py``.
     """
     scfg = static_part(cfg)
 
@@ -53,28 +61,75 @@ def make_sm_runner(cfg, mode: str = "vmap", mesh: Mesh = None):
                 (warp, sm, req, stats_sm))
         return runner
 
-    raise ValueError(f"unknown mode {mode!r} (shard mode uses "
-                     "make_sharded_quantum)")
+    if mode == "shard":
+        if mesh is None or "sm" not in mesh.axis_names:
+            raise ValueError(
+                "mode='shard' needs mesh= with an 'sm' axis, e.g. "
+                "make_sm_runner(cfg, 'shard', make_host_mesh(n, 'sm'))")
+        from jax.experimental.shard_map import shard_map
+
+        if len(mesh.axis_names) > 1:
+            # Slice out a 1-D ('sm',) submesh: a shard_map whose specs
+            # never mention some mesh axis mis-replicates across compiled
+            # loop iterations under check_rep=False (the claim is trusted,
+            # not enforced), so this runner — whose loop lives OUTSIDE the
+            # shard region in engine.quantum_step — must own every axis of
+            # the mesh it runs on.  Lane-parallel execution over a full
+            # 2-D ('cfg', 'sm') mesh is core/distribute.py's job, where
+            # the whole loop sits inside one shard_map.
+            axis = mesh.axis_names.index("sm")
+            devs = mesh.devices[tuple(
+                slice(None) if i == axis else 0
+                for i in range(mesh.devices.ndim))]
+            mesh = Mesh(devs, ("sm",))
+
+        n_dev = mesh.shape["sm"]
+        if scfg.n_sm % n_dev:
+            raise ValueError(
+                f"n_sm={scfg.n_sm} not divisible by mesh 'sm' axis "
+                f"size {n_dev}")
+        sm_spec, rep = P("sm"), P()
+
+        def spec_like(tree, spec):
+            return jax.tree_util.tree_map(lambda _: spec, tree)
+
+        def runner(warp, sm, req, stats_sm, trace, t0, dyn):
+            def local(warp, sm, req, stats_sm, trace, t0, dyn):
+                return jax.vmap(
+                    lambda w, s, r, st: sm_quantum_single(
+                        w, s, r, st, trace, t0, scfg, dyn))(
+                    warp, sm, req, stats_sm)
+
+            parts = (warp, sm, req, stats_sm)
+            in_specs = tuple(spec_like(p, sm_spec) for p in parts) + (
+                spec_like(trace, rep), rep, spec_like(dyn, rep))
+            out_specs = tuple(spec_like(p, sm_spec) for p in parts)
+            fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+            return fn(warp, sm, req, stats_sm, trace, t0, dyn)
+        return runner
+
+    raise ValueError(f"unknown mode {mode!r} (expected seq/vmap/shard)")
 
 
-def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
-                         exchange: str = "window"):
-    """The whole quantum step under shard_map (engine.quantum_step analogue).
+def make_shard_body(cfg, n_dev: int, exchange: str = "window"):
+    """The per-device quantum step for SM-axis sharding — a plain traced
+    function of LOCAL shards, written against mesh axis name 'sm'.
 
-    Per-SM arrays are sharded over the 'sm' axis; mem/ctrl/global-stats are
-    replicated.  The serial region all-gathers the (small) request table and
-    warp arrays, computes identical results on every device, and each device
-    then runs its SM shard locally for Δ cycles.
+    ``body(warp, sm, req, stats_sm, mem, ctrl, gstats, trace, dyn)`` where
+    warp/sm/req/stats_sm hold this device's SM block (n_sm // n_dev rows)
+    and mem/ctrl/gstats/trace/dyn are replicated.  The serial region
+    all-gathers the (small) request table and warp arrays over 'sm',
+    computes identical results on every device, and each device then runs
+    its SM shard locally for Δ cycles.
 
-    exchange='window' — one all-gather per quantum (the lookahead window,
-    beyond-paper optimization).  exchange='cycle' — additionally all-gathers
-    every inner cycle, emulating the paper's per-cycle OpenMP barrier;
-    results are bit-identical, only communication frequency differs.
+    Factored out of ``make_sharded_quantum`` so the same body serves the
+    1-D ('sm',) mesh (below) and the 2-D ('cfg', 'sm') mesh
+    (core/distribute.py), where it additionally runs vmapped over the
+    device-local config lanes — collectives stay per-'sm'-group, so each
+    lane remains bit-identical to its solo run.
     """
-    from jax.experimental.shard_map import shard_map
-
     scfg = static_part(cfg)
-    n_dev = mesh.shape["sm"]
     assert scfg.n_sm % n_dev == 0, (scfg.n_sm, n_dev)
     chunk = scfg.n_sm // n_dev
 
@@ -132,6 +187,26 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
                                ctrl["done_cycle"])
         ctrl = dict(ctrl, cycle=cycle_end, done_cycle=done_cycle)
         return warp_l, sm, req_l, stats_sm, mem, ctrl, gstats
+
+    return body
+
+
+def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
+                         exchange: str = "window"):
+    """The whole quantum step under shard_map (engine.quantum_step analogue).
+
+    Per-SM arrays are sharded over the 'sm' axis; mem/ctrl/global-stats are
+    replicated — see ``make_shard_body`` for the per-device step.
+
+    exchange='window' — one all-gather per quantum (the lookahead window,
+    beyond-paper optimization).  exchange='cycle' — additionally all-gathers
+    every inner cycle, emulating the paper's per-cycle OpenMP barrier;
+    results are bit-identical, only communication frequency differs.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n_dev = mesh.shape["sm"]
+    body = make_shard_body(cfg, n_dev, exchange)
 
     sm_spec = P("sm")
     rep = P()

@@ -16,6 +16,13 @@ benchmarks × configs grid as ONE ``jit(vmap(vmap(run_workload_stacked)))``
 program — every (workload, config) lane bit-identical to its solo run
 (tests/test_zoo_grid.py; ``python -m repro.launch.zoo --grid 4 4 --check``).
 
+Both sweeps optionally distribute over a 2-D ('cfg', 'sm') device mesh
+(core/distribute.py): pass ``mesh=make_mesh(A, B)`` and the lane axis is
+sharded over 'cfg' while each lane's SM axis is sharded over 'sm' — the
+stacked dynamic-config pytree is placed with an explicit NamedSharding,
+and every lane stays bit-identical to its solo run at any mesh shape
+(tests/test_mesh_sweep.py).
+
 Usage:
     cfgs = [dataclasses.replace(TINY, l2_lat=v) for v in (16, 32, 64, ...)]
     result = sweep(workload, cfgs)
@@ -23,6 +30,9 @@ Usage:
 
     grid = grid_sweep([zoo_workload(n) for n in zoo_names()[:4]], cfgs)
     grid.stats[w][c]  # workload-major grid of finalized stat dicts
+
+    mesh = distribute.make_mesh(2, 2)          # 4 devices, ('cfg', 'sm')
+    grid = grid_sweep(workloads, cfgs, mesh=mesh)   # same stats, sharded
 """
 from __future__ import annotations
 
@@ -94,12 +104,33 @@ class SweepResult:
 
 
 def sweep(workload: Workload, cfgs, mode: str = "vmap",
-          max_cycles: int = 1 << 20) -> SweepResult:
-    """Run ``workload`` under every config in one compiled, vmapped call."""
+          max_cycles: int = 1 << 20, mesh=None,
+          exchange: str = "window") -> SweepResult:
+    """Run ``workload`` under every config in one compiled, vmapped call.
+
+    With ``mesh`` (a 2-D ('cfg', 'sm') Mesh, core/distribute.py:make_mesh)
+    the lanes are sharded over the 'cfg' axis and each lane's SM axis over
+    'sm' — same stats, bit-exact, at any mesh shape."""
     scfg, dyn_batch = stack_dyn(cfgs)
     packed = [k.pack() for k in workload.kernels]
-    runner = make_sweep_runner(scfg, packed, mode, max_cycles)
-    bstate = jax.block_until_ready(runner(dyn_batch))
+    if mesh is not None:
+        from repro.core import distribute
+        from repro.core.batch import stack_kernels
+
+        if mode != "vmap":
+            raise ValueError(
+                f"mode={mode!r} conflicts with mesh=: the distributed "
+                "path has its own in-lane execution (sharded SM axis); "
+                "pass mode='vmap' (the default) or drop mesh=")
+        distribute.check_mesh(mesh, scfg, len(cfgs))
+        dyn_batch = distribute.place_lanes(dyn_batch, mesh)
+        runner = distribute.make_dist_sweep_runner(scfg, mesh, max_cycles,
+                                                   exchange)
+        bstate = jax.block_until_ready(
+            runner(stack_kernels(packed), dyn_batch))
+    else:
+        runner = make_sweep_runner(scfg, packed, mode, max_cycles)
+        bstate = jax.block_until_ready(runner(dyn_batch))
     n = len(cfgs)
     stats = [S.finalize(take_lane(bstate, i)) for i in range(n)]
     return SweepResult(scfg=scfg, state=bstate, n=n, stats=stats)
@@ -149,15 +180,35 @@ class GridResult:
 
 
 def grid_sweep(workloads, cfgs, mode: str = "vmap",
-               max_cycles: int = 1 << 20) -> GridResult:
+               max_cycles: int = 1 << 20, mesh=None,
+               exchange: str = "window") -> GridResult:
     """Simulate every workload under every config — W×C lanes, ONE
     compiled call.  Workloads are padded to shared (kernel count,
     instruction count) with inert kernels/NOP slots (core/batch.py), so
     each lane is bit-identical to a solo ``simulate()`` of that
-    (workload, config) pair."""
+    (workload, config) pair.
+
+    With ``mesh`` (2-D ('cfg', 'sm'), core/distribute.py) config lanes
+    are sharded over 'cfg', each lane's SM axis over 'sm'; the workload
+    axis is replicated.  Stats are bit-exact at any mesh shape."""
     scfg, dyn_batch = stack_dyn(cfgs)
     stacked = stack_workloads(workloads)
-    runner = make_grid_runner(scfg, mode, max_cycles)
+    if mesh is not None:
+        from repro.core import distribute
+
+        if mode != "vmap":
+            raise ValueError(
+                f"mode={mode!r} conflicts with mesh=: the distributed "
+                "path has its own in-lane execution (sharded SM axis); "
+                "pass mode='vmap' (the default) or drop mesh=")
+        distribute.check_mesh(mesh, scfg, len(cfgs))
+        dyn_batch = distribute.place_lanes(dyn_batch, mesh)
+        stacked = distribute.place_lanes(
+            stacked, mesh, jax.sharding.PartitionSpec())
+        runner = distribute.make_dist_grid_runner(scfg, mesh, max_cycles,
+                                                  exchange)
+    else:
+        runner = make_grid_runner(scfg, mode, max_cycles)
     bstate = jax.block_until_ready(runner(stacked, dyn_batch))
     nw, nc = len(workloads), len(cfgs)
     stats = [[S.finalize(take_grid_lane(bstate, w, c)) for c in range(nc)]

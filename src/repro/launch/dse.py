@@ -4,6 +4,12 @@
   python -m repro.launch.dse --base 3080ti --axis dram_row_penalty \\
       --values 8,16,24,48
   python -m repro.launch.dse --n 8 --check     # verify vs solo runs
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      python -m repro.launch.dse --n 8 --mesh 2 2 --check
+
+``--mesh A B`` shards the config lanes over a 2-D ('cfg', 'sm') device
+mesh (core/distribute.py) — A cfg-devices × B sm-devices, A×B devices
+total (on CPU, force them with XLA_FLAGS before jax initializes).
 
 Without --axis, a default grid is swept: L2 latency × scheduler (GTO/LRR),
 the two knobs with the clearest IPC signal on the paper's benchmarks.
@@ -69,6 +75,9 @@ def main(argv=None):
     ap.add_argument("--values", default="",
                     help="comma-separated values for --axis")
     ap.add_argument("--max-cycles", type=int, default=1 << 15)
+    ap.add_argument("--mesh", nargs=2, type=int, metavar=("A", "B"),
+                    help="distribute lanes over a 2-D ('cfg','sm') mesh — "
+                         "A cfg-devices × B sm-devices")
     ap.add_argument("--check", action="store_true",
                     help="verify every lane against a solo engine run")
     args = ap.parse_args(argv)
@@ -82,9 +91,14 @@ def main(argv=None):
     else:
         cfgs = default_grid(base, args.n)
 
+    mesh = None
+    if args.mesh:
+        from repro.core.distribute import make_mesh
+        mesh = make_mesh(*args.mesh)
+
     w = make_workload(args.workload, scale=args.scale)
     t0 = time.time()
-    result = sweep(w, cfgs, max_cycles=args.max_cycles)
+    result = sweep(w, cfgs, max_cycles=args.max_cycles, mesh=mesh)
     wall = time.time() - t0
 
     rows = []
@@ -93,8 +107,11 @@ def main(argv=None):
                          l1_miss=st["l1_miss"], l2_miss=st["l2_miss"],
                          dram_req=st["dram_req"]))
     print(json.dumps(rows, indent=1))
-    print(f"[dse] {len(cfgs)} configs × {w.name}: one compiled call, "
-          f"wall={wall:.1f}s ({len(cfgs) / max(wall, 1e-9):.2f} configs/s)")
+    where = (f"{args.mesh[0]}x{args.mesh[1]} ('cfg','sm') mesh"
+             if args.mesh else "one device")
+    print(f"[dse] {len(cfgs)} configs × {w.name}: one compiled call on "
+          f"{where}, wall={wall:.1f}s "
+          f"({len(cfgs) / max(wall, 1e-9):.2f} configs/s)")
 
     if args.check:
         # one compiled UNBATCHED program checks every lane: dyn is a traced

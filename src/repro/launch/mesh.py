@@ -36,6 +36,12 @@ def make_host_mesh(n: int | None = None, axis: str = "sm"):
     return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
 
 
+# 2-D ('cfg', 'sm') sweep meshes are built by repro.core.distribute.make_mesh
+# (config lanes over 'cfg', each lane's SM axis over 'sm'); on CPU, force
+# host devices BEFORE jax initializes:
+# XLA_FLAGS=--xla_force_host_platform_device_count=<n_cfg*n_sm>.
+
+
 def make_ctx(mesh) -> ShardCtx:
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     tp = "model" if "model" in mesh.axis_names else None

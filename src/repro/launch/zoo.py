@@ -4,6 +4,8 @@ whole benchmarks × configs grid as ONE compiled program.
   python -m repro.launch.zoo --list
   python -m repro.launch.zoo --run random_gather --scale 0.05
   python -m repro.launch.zoo --grid 4 4 --check     # W×C lanes vs solo
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      python -m repro.launch.zoo --grid 4 4 --mesh 2 2 --check
 
 ``--grid W C`` takes the first W zoo workloads (registry order) and a
 C-point config grid (launch/dse.py:default_grid — L2 latency × scheduler)
@@ -11,6 +13,13 @@ and runs the full grid in one ``jit(vmap(vmap(...)))`` call
 (core/sweep.py:grid_sweep).  ``--check`` reruns every (workload, config)
 pair solo and asserts the grid lane is bit-identical — including lanes
 whose workload was padded with NOP slots / empty kernels (core/batch.py).
+
+``--mesh A B`` distributes the grid over a 2-D ('cfg', 'sm') device mesh
+(core/distribute.py): config lanes sharded over A cfg-devices, each
+lane's SM axis over B sm-devices.  Needs A×B devices — on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=<A*B>`` before jax
+initializes.  ``--check`` still compares against single-device solo runs,
+so it proves the distributed lanes bit-exact end to end.
 """
 from __future__ import annotations
 
@@ -42,13 +51,20 @@ def run_grid(args) -> None:
     workloads = [zoo_workload(n, scale=args.scale) for n in names[:n_w]]
     cfgs = default_grid(base, n_c)
 
+    mesh = None
+    if args.mesh:
+        from repro.core.distribute import make_mesh
+        mesh = make_mesh(*args.mesh)
+
     t0 = time.time()
-    grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles)
+    grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles, mesh=mesh)
     wall = time.time() - t0
     print(json.dumps(grid.table(), indent=1))
     lanes = n_w * n_c
+    where = (f"{args.mesh[0]}x{args.mesh[1]} ('cfg','sm') mesh"
+             if args.mesh else "one device")
     print(f"[zoo] grid {n_w} workloads × {n_c} configs = {lanes} lanes: "
-          f"one compiled call, wall={wall:.1f}s "
+          f"one compiled call on {where}, wall={wall:.1f}s "
           f"({lanes / max(wall, 1e-9):.2f} lanes/s)")
 
     if args.check:
@@ -84,6 +100,9 @@ def main(argv=None):
     ap.add_argument("--run", default="", help="simulate one zoo workload")
     ap.add_argument("--grid", nargs=2, type=int, metavar=("W", "C"),
                     help="sweep first W workloads × C configs, one program")
+    ap.add_argument("--mesh", nargs=2, type=int, metavar=("A", "B"),
+                    help="with --grid: distribute over a 2-D ('cfg','sm') "
+                         "mesh — A cfg-devices × B sm-devices")
     ap.add_argument("--base", choices=sorted(BASES), default="tiny")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--max-cycles", type=int, default=1 << 15)

@@ -1,0 +1,91 @@
+"""2-D ('cfg', 'sm') mesh distribution (core/distribute.py) — the
+acceptance property: ``grid_sweep`` stats are bit-identical across mesh
+shapes 1×1, 2×1, 1×2, 2×2 (and the no-mesh single-device path) on forced
+host devices.  Subprocess because jax locks the host device count at
+first init; shape-validation errors are cheap and run in-process."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses, json
+    from repro.core import stats as S
+    from repro.core.distribute import make_mesh
+    from repro.core.sweep import grid_sweep
+    from repro.sim.config import TINY
+    from repro.sim.workloads import zoo_workload
+
+    MAX = 1 << 14
+    cfgs = [TINY,
+            dataclasses.replace(TINY, scheduler="lrr"),
+            dataclasses.replace(TINY, l2_lat=64, dram_row_penalty=48),
+            dataclasses.replace(TINY, l1_hit_lat=16, icnt_lat=24,
+                                scheduler="lrr")]
+    ws = [zoo_workload(n, scale=0.02) for n in ("gemm_tiled", "mixed")]
+
+    def sig(st):
+        return dict(S.comparable(st), timeouts=st["timeouts"])
+
+    results = {}
+    for label, mesh in (("nomesh", None), ("1x1", make_mesh(1, 1)),
+                        ("2x1", make_mesh(2, 1)), ("1x2", make_mesh(1, 2)),
+                        ("2x2", make_mesh(2, 2))):
+        g = grid_sweep(ws, cfgs, mesh=mesh, max_cycles=MAX)
+        results[label] = [sig(g.stats[w][c])
+                          for w in range(len(ws)) for c in range(len(cfgs))]
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_grid_sweep_mesh_shape_invariant():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    ref = results.pop("nomesh")
+    assert any(s["cycles"] > 0 for s in ref)   # the sweep actually ran
+    for shape, got in results.items():
+        assert got == ref, f"mesh {shape} diverged from single-device run"
+
+
+class _StubMesh:
+    """check_mesh only reads axis_names/shape, so shape validation is
+    testable without forcing multi-device jax state."""
+
+    def __init__(self, n_cfg, n_sm, names=("cfg", "sm")):
+        self.axis_names = names
+        self.shape = {names[0]: n_cfg, names[-1]: n_sm}
+
+
+def test_check_mesh_rejects_bad_shapes():
+    from repro.core.distribute import check_mesh
+    from repro.sim.config import TINY, static_part
+
+    scfg = static_part(TINY)   # n_sm = 8
+    check_mesh(_StubMesh(2, 2), scfg, n_lanes=4)          # divides: OK
+    with pytest.raises(ValueError, match="lanes not divisible"):
+        check_mesh(_StubMesh(3, 1), scfg, n_lanes=4)
+    with pytest.raises(ValueError, match="n_sm=8 not divisible"):
+        check_mesh(_StubMesh(1, 3), scfg, n_lanes=3)
+    with pytest.raises(ValueError, match="axes"):
+        check_mesh(_StubMesh(2, 2, names=("data", "model")), scfg, 4)
+
+
+def test_make_mesh_too_few_devices():
+    import jax
+
+    from repro.core.distribute import make_mesh
+
+    n = len(jax.devices())
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_mesh(n + 1, 1)
