@@ -12,28 +12,35 @@ uploads so the perf trajectory is comparable across commits.
   dse   — batched config sweep vs solo-run loop             (DSE layer)
   grid  — batched workloads × configs grid vs solo loop     (zoo frontend)
   mesh  — distributed grid sweep vs 2-D ('cfg','sm') mesh shape
+  tables — table-valued vs scalar-only dyn pytree lanes/sec (DynConfig)
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+# runnable as `python benchmarks/run.py` from anywhere: the `benchmarks`
+# package lives at the repo root, not under src/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: fig1 fig5 fig6 fig7 det dse grid mesh "
-                         "roofline kernels")
+                         "tables roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     args = ap.parse_args()
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
-                            grid_sweep, kernels_bench, mesh_sweep, roofline)
+                            grid_sweep, kernels_bench, mesh_sweep, roofline,
+                            table_sweep)
     from benchmarks.common import save_bench
 
     suites = {
@@ -47,6 +54,7 @@ def main() -> None:
         "dse": dse_sweep.run,
         "grid": grid_sweep.run,
         "mesh": (lambda: mesh_sweep.run(fast=args.fast)),
+        "tables": table_sweep.run,
     }
     rows = []
     failed = False

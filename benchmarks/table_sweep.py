@@ -1,0 +1,90 @@
+"""Table-sweep throughput: what do the per-class timing-table leaves cost?
+
+Two sweeps over the same lane count, same workload, same compiled-engine
+shape:
+
+  · ``tables``  — the typed DynConfig as-is: per-lane (N_CLASSES,)
+    ``core.lat``/``core.disp`` tables are traced inputs, each lane carries
+    a DIFFERENT per-class latency point (launch/dse.py:sample_table_grid);
+  · ``scalar``  — the pre-refactor representation emulated: the tables
+    are baked into the program as compile-time constants (every lane
+    shares the default class tables) and only the scalar leaves + sched
+    remain traced.
+
+The delta prices the table-valued refactor's runtime cost (it should be
+noise: two small gathers per issued instruction either way — against a
+20+×-larger sweepable design space per lane).  Reports lanes/sec for
+both, like the dse suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
+from repro.core.engine import run_workload
+from repro.core.parallel import make_sm_runner
+from repro.core.sweep import make_sweep_runner, stack_dyn
+from repro.launch.dse import sample_table_grid
+from repro.sim.config import (DISPATCH_OF_CLASS, LATENCY_OF_CLASS, TINY)
+from repro.sim.state import init_state
+from repro.workloads import make_workload
+
+N_CONFIGS = 8
+BENCH = "hotspot"
+
+
+def run() -> list[dict]:
+    w = make_workload(BENCH, scale=SIM_SCALE)
+    cfgs = sample_table_grid(TINY, N_CONFIGS,
+                             sample_lat=[("fp32", 2, 16), ("sfu", 8, 32)],
+                             sample_disp=[("tensor", 1, 4)])
+    scfg, dyn_batch = stack_dyn(cfgs)
+    packed = [k.pack() for k in w.kernels]
+    max_cycles = min(MAX_CYCLES, 1 << 15)
+    sm_runner = make_sm_runner(scfg, "vmap")
+
+    # table-valued: the whole DynConfig (tables included) is traced
+    batched = make_sweep_runner(scfg, packed, max_cycles=max_cycles)
+    t_tab = timeit(
+        lambda: jax.block_until_ready(batched(dyn_batch)), warmup=1, iters=3)
+
+    # scalar-only: bake the default class tables in as constants; the lanes
+    # then differ only in scalar knobs (the old 7-scalar pytree, emulated)
+    const_lat = jnp.asarray(LATENCY_OF_CLASS, jnp.int32)
+    const_disp = jnp.asarray(DISPATCH_OF_CLASS, jnp.int32)
+
+    def run_one_scalar(dyn):
+        core = dataclasses.replace(dyn.core, lat=const_lat, disp=const_disp)
+        d = dataclasses.replace(dyn, core=core)
+        return run_workload(init_state(scfg), packed, scfg, d, sm_runner,
+                            max_cycles)
+
+    scalar_batched = jax.jit(jax.vmap(run_one_scalar))
+    t_sc = timeit(
+        lambda: jax.block_until_ready(scalar_batched(dyn_batch)),
+        warmup=1, iters=3)
+
+    rows = [{
+        "name": f"tables/table_valued_x{N_CONFIGS}",
+        "us_per_call": t_tab * 1e6,
+        "derived": f"lanes_per_s={N_CONFIGS / t_tab:.2f}",
+    }, {
+        "name": f"tables/scalar_only_x{N_CONFIGS}",
+        "us_per_call": t_sc * 1e6,
+        "derived": (f"lanes_per_s={N_CONFIGS / t_sc:.2f} "
+                    f"table_overhead={t_tab / t_sc:.2f}x"),
+    }]
+    save_json("table_sweep", {
+        "n_configs": N_CONFIGS, "bench": BENCH, "scale": SIM_SCALE,
+        "max_cycles": max_cycles, "t_tables_s": t_tab, "t_scalar_s": t_sc,
+        "table_overhead": t_tab / t_sc,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -16,7 +16,11 @@ module unifies the two behind one mesh abstraction:
 
 Each device therefore simulates its (config-shard × SM-shard) block, and
 every lane is bit-identical to its solo single-device run at ANY mesh
-shape — 1×N, N×1, A×B (tests/test_mesh_sweep.py).  All simulator state is
+shape — 1×N, N×1, A×B (tests/test_mesh_sweep.py).  The lane-stacked
+dynamic pytree placed over 'cfg' is the typed ``DynConfig``: its scalar
+leaves shard as (n_lanes,) and the per-class ``core.lat``/``core.disp``
+tables as (n_lanes, N_CLASSES) — ``P('cfg')`` touches only the leading
+lane axis, so table-valued sweeps distribute exactly like scalar ones.  All simulator state is
 int32, so there is no floating-point reassociation to worry about either.
 
 CPU recipe (jax locks the device count at first init, so set this before

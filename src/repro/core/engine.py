@@ -10,10 +10,12 @@ serves the sequential, vectorized and sharded execution modes — results are
 bit-identical by construction (tests/test_sim_determinism.py).
 
 Config threading: the engine takes the hashable ``StaticConfig`` (jit-static
-shapes) and the ``dyn`` pytree of traced timing parameters separately.  All
-timing numerics enter the compiled program as *arguments*, never as Python
-constants, so ``core/sweep.py`` can vmap the whole engine over a batch of
-dynamic configs (one design-space-exploration lane per config).
+shapes) and the typed ``DynConfig`` pytree of traced timing parameters
+separately.  All timing numerics — scalar latencies AND the per-class
+``core.lat``/``core.disp`` tables — enter the compiled program as
+*arguments*, never as Python constants, so ``core/sweep.py`` can vmap the
+whole engine over a batch of dynamic configs (one design-space-exploration
+lane per config, ~20+ sweepable entries each).
 
 Kernel threading: a workload's kernels are padded + stacked
 (core/batch.py) and run by a ``lax.scan`` over the kernel axis
@@ -26,15 +28,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.sim.config import GPUConfig, StaticConfig, split_config
+from repro.sim.config import DynConfig, GPUConfig, StaticConfig, split_config
 from repro.sim.cta import cta_issue
 from repro.sim.memsys import mem_phase
 from repro.sim.state import init_state, reset_for_kernel
 from repro.sim.trace import Workload
 
 
-def quantum_step(state: dict, trace: dict, cfg: StaticConfig, dyn: dict,
-                 sm_runner):
+def quantum_step(state: dict, trace: dict, cfg: StaticConfig,
+                 dyn: DynConfig, sm_runner):
     t0 = state["ctrl"]["cycle"]
     req, mem, gstats = mem_phase(state["req"], state["mem"], state["stats"],
                                  t0, cfg, dyn,
@@ -56,8 +58,8 @@ def quantum_step(state: dict, trace: dict, cfg: StaticConfig, dyn: dict,
             "stats_sm": stats_sm, "stats": gstats}
 
 
-def run_kernel(state: dict, trace: dict, cfg: StaticConfig, dyn: dict,
-               sm_runner, max_cycles: int = 1 << 20):
+def run_kernel(state: dict, trace: dict, cfg: StaticConfig,
+               dyn: DynConfig, sm_runner, max_cycles: int = 1 << 20):
     def cond(st):
         return (st["ctrl"]["done_cycle"] < 0) & \
             (st["ctrl"]["cycle"] < max_cycles)
@@ -77,7 +79,7 @@ def kernel_cycles(ctrl: dict):
 
 
 def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
-                         dyn: dict, sm_runner, max_cycles: int = 1 << 20,
+                         dyn: DynConfig, sm_runner, max_cycles: int = 1 << 20,
                          state_transform=None, kernel_runner=None) -> dict:
     """Run a whole workload as ONE traced program: ``lax.scan`` over the
     stacked kernel axis (core/batch.py:stack_kernels).
@@ -126,8 +128,8 @@ def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
                                  timeouts=timeouts))
 
 
-def run_workload(state: dict, kernels: list, cfg: StaticConfig, dyn: dict,
-                 sm_runner=None, max_cycles: int = 1 << 20,
+def run_workload(state: dict, kernels: list, cfg: StaticConfig,
+                 dyn: DynConfig, sm_runner=None, max_cycles: int = 1 << 20,
                  state_transform=None, kernel_runner=None) -> dict:
     """Run packed kernels back-to-back, accumulating total cycles.
 

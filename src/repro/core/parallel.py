@@ -33,7 +33,10 @@ def make_sm_runner(cfg, mode: str = "vmap", mesh: Mesh = None):
     """Returns sm_runner(warp, sm, req, stats_sm, trace, t0, dyn).
 
     cfg may be a full GPUConfig or just its StaticConfig half — only static
-    shape fields are closed over; all timing numerics flow in via ``dyn``.
+    shape fields are closed over; all timing numerics flow in via ``dyn``
+    (the typed DynConfig pytree — replicated under shard_map, vmapped over
+    lanes by core/sweep.py; the spec/tree plumbing below is pytree-generic
+    so the grouped, table-valued leaves need no special casing).
 
     mode='shard' needs a ``mesh`` with an 'sm' axis: the SM phase runs
     under shard_map over that axis (each device vmaps its SM block), while

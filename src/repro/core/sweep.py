@@ -1,10 +1,11 @@
 """Batched design-space exploration: vmap the WHOLE simulator over configs.
 
 The tentpole consequence of the static/dynamic config split (sim/config.py):
-every timing parameter reaches the compiled engine as a traced argument, so
-a sweep over N candidate configs that share one ``StaticConfig`` shape is a
-single ``jit(vmap(run_workload))`` — one XLA program, one compilation, all
-lanes advancing together on one chip.  Each vmap lane is bit-identical to a
+every timing parameter — scalar latencies AND the typed ``DynConfig``'s
+per-class ``core.lat``/``core.disp`` tables — reaches the compiled engine as
+a traced argument, so a sweep over N candidate configs that share one
+``StaticConfig`` shape is a single ``jit(vmap(run_workload))`` — one XLA
+program, one compilation, all lanes advancing together on one chip.  Each vmap lane is bit-identical to a
 solo run of that config (tests/test_dse_sweep.py): JAX's while_loop batching
 rule keeps finished lanes frozen via select, so early-finishing configs are
 unaffected by stragglers.
@@ -51,14 +52,32 @@ from repro.sim.trace import Workload
 
 
 def stack_dyn(cfgs):
-    """Split each config and stack the dynamic pytrees along a new leading
-    lane axis.  All configs must share the same StaticConfig (one shape =
-    one compiled program); raises ValueError otherwise."""
+    """Split each config and stack the typed ``DynConfig`` pytrees along a
+    new leading lane axis — scalar leaves become ``(n,)``, the per-class
+    ``core.lat``/``core.disp`` tables become ``(n, N_CLASSES)``.
+
+    A lane may be a full ``GPUConfig`` or a pre-split ``(StaticConfig,
+    dyn_overrides)`` pair (flat dict or ``DynConfig``) — the raw-table
+    route a DSE search loop takes.  All lanes must share the same
+    StaticConfig (one shape = one compiled program), and every lane is
+    validated at build time, BEFORE any trace: split_config checks the
+    override keys, the table lengths, and the machine invariant
+    quantum Δ ≤ icnt_lat (config.py:check_dyn) — closing the flat-dict
+    bypass of GPUConfig.__post_init__ — and any failure is re-raised
+    naming the offending lane."""
     if not cfgs:
         raise ValueError("empty config list")
-    splits = [split_config(c) for c in cfgs]
+    splits = []
+    for i, c in enumerate(cfgs):
+        try:
+            if isinstance(c, tuple) and len(c) == 2:
+                splits.append(split_config(c[0], c[1]))
+            else:
+                splits.append(split_config(c))
+        except ValueError as e:
+            raise ValueError(f"config lane {i}: {e}") from None
     scfg = splits[0][0]
-    for i, (s, _) in enumerate(splits[1:], start=1):
+    for i, (s, _) in enumerate(splits):
         if s != scfg:
             raise ValueError(
                 f"config {i} has a different static shape than config 0 "

@@ -3,6 +3,7 @@
   python -m repro.launch.dse --n 8 --workload hotspot --scale 0.02
   python -m repro.launch.dse --base 3080ti --axis dram_row_penalty \\
       --values 8,16,24,48
+  python -m repro.launch.dse --n 8 --sample-lat fp32 2 8 --check
   python -m repro.launch.dse --n 8 --check     # verify vs solo runs
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       python -m repro.launch.dse --n 8 --mesh 2 2 --check
@@ -11,11 +12,19 @@
 mesh (core/distribute.py) — A cfg-devices × B sm-devices, A×B devices
 total (on CPU, force them with XLA_FLAGS before jax initializes).
 
-Without --axis, a default grid is swept: L2 latency × scheduler (GTO/LRR),
-the two knobs with the clearest IPC signal on the paper's benchmarks.
-All lanes share one StaticConfig shape — only traced timing parameters and
-the scheduler selector differ, which is what makes the whole sweep a single
-``jit(vmap(engine))`` call (core/sweep.py).
+``--sample-lat CLASS LO HI`` (repeatable; likewise ``--sample-disp``)
+sweeps a PER-CLASS entry of the typed DynConfig's timing tables: the N
+lanes step the result latency (or dispatch interval) of instruction class
+CLASS (fp32/int32/sfu/tensor/ldg/stg/bar) evenly from LO to HI — the
+table leaves are traced, so the whole per-class sweep is still one
+compiled program.  The ldg latency entry is inert (load latency is
+cache-dependent: see sim/config.py:CoreDyn).
+
+Without --axis/--sample-*, a default grid is swept: L2 latency × scheduler
+(GTO/LRR), the two knobs with the clearest IPC signal on the paper's
+benchmarks.  All lanes share one StaticConfig shape — only traced timing
+parameters and the scheduler selector differ, which is what makes the
+whole sweep a single ``jit(vmap(engine))`` call (core/sweep.py).
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import sweep
 from repro.sim.config import (DYNAMIC_FIELDS, RTX3080TI, TINY, GPUConfig,
-                              split_config)
+                              class_index, split_config)
 from repro.sim.state import init_state
 from repro.workloads import make_workload
 
@@ -58,9 +67,35 @@ def axis_grid(base: GPUConfig, axis: str, values: list) -> list:
     return [dataclasses.replace(base, **{axis: int(v)}) for v in values]
 
 
+def sample_table_grid(base: GPUConfig, n: int, sample_lat=(),
+                      sample_disp=()) -> list:
+    """n configs stepping per-class table entries evenly over [lo, hi].
+
+    ``sample_lat`` / ``sample_disp``: sequences of (class_name, lo, hi)
+    triples; several triples vary jointly across the same n lanes.  Lane i
+    gets entry = round(lo + i/(n-1) * (hi-lo)) — deterministic, endpoints
+    included."""
+    out = []
+    for i in range(n):
+        frac = i / max(n - 1, 1)
+        lat = list(base.lat_of_class)
+        disp = list(base.disp_of_class)
+        for table, samples in ((lat, sample_lat), (disp, sample_disp)):
+            for cls, lo, hi in samples:
+                table[class_index(str(cls))] = round(
+                    int(lo) + frac * (int(hi) - int(lo)))
+        out.append(dataclasses.replace(base, lat_of_class=tuple(lat),
+                                       disp_of_class=tuple(disp)))
+    return out
+
+
 def describe(cfg: GPUConfig) -> dict:
     d = {k: getattr(cfg, k) for k in DYNAMIC_FIELDS}
     d["scheduler"] = cfg.scheduler
+    # always present so every row of a sweep has the same keys (a sampled
+    # lane can land exactly on the default table)
+    d["lat"] = list(cfg.lat_of_class)
+    d["disp"] = list(cfg.disp_of_class)
     return d
 
 
@@ -74,6 +109,15 @@ def main(argv=None):
                     help="sweep one config field instead of the default grid")
     ap.add_argument("--values", default="",
                     help="comma-separated values for --axis")
+    ap.add_argument("--sample-lat", nargs=3, action="append", default=[],
+                    metavar=("CLASS", "LO", "HI"),
+                    help="step the per-class result latency of CLASS "
+                         "(fp32/int32/sfu/tensor/ldg/stg/bar) over the N "
+                         "lanes from LO to HI; repeatable")
+    ap.add_argument("--sample-disp", nargs=3, action="append", default=[],
+                    metavar=("CLASS", "LO", "HI"),
+                    help="step the per-class dispatch interval of CLASS "
+                         "over the N lanes from LO to HI; repeatable")
     ap.add_argument("--max-cycles", type=int, default=1 << 15)
     ap.add_argument("--mesh", nargs=2, type=int, metavar=("A", "B"),
                     help="distribute lanes over a 2-D ('cfg','sm') mesh — "
@@ -83,11 +127,17 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     base = BASES[args.base]
+    if args.axis and (args.sample_lat or args.sample_disp):
+        raise SystemExit("--axis and --sample-lat/--sample-disp are "
+                         "separate sweep modes; pick one")
     if args.axis:
         values = [v for v in args.values.split(",") if v]
         if not values:
             raise SystemExit("--axis needs --values v1,v2,...")
         cfgs = axis_grid(base, args.axis, values)
+    elif args.sample_lat or args.sample_disp:
+        cfgs = sample_table_grid(base, args.n, args.sample_lat,
+                                 args.sample_disp)
     else:
         cfgs = default_grid(base, args.n)
 

@@ -14,6 +14,13 @@ and runs the full grid in one ``jit(vmap(vmap(...)))`` call
 pair solo and asserts the grid lane is bit-identical — including lanes
 whose workload was padded with NOP slots / empty kernels (core/batch.py).
 
+``--sample-lat CLASS LO HI`` / ``--sample-disp CLASS LO HI`` (repeatable)
+replace the default config grid with a per-class timing-table sweep
+(launch/dse.py:sample_table_grid): the C lanes step the result latency /
+dispatch interval of instruction class CLASS evenly from LO to HI — the
+typed DynConfig's table leaves are traced, so benchmarks × per-class
+timing points still compile to one program.
+
 ``--mesh A B`` distributes the grid over a 2-D ('cfg', 'sm') device mesh
 (core/distribute.py): config lanes sharded over A cfg-devices, each
 lane's SM axis over B sm-devices.  Needs A×B devices — on CPU set
@@ -31,7 +38,7 @@ from repro.core import stats as S
 from repro.core.engine import simulate
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import grid_sweep
-from repro.launch.dse import BASES, default_grid
+from repro.launch.dse import BASES, default_grid, sample_table_grid
 from repro.sim.workloads import zoo_names, zoo_workload
 
 
@@ -49,7 +56,11 @@ def run_grid(args) -> None:
         raise SystemExit(f"--grid {n_w} exceeds zoo size {len(names)}")
     base = BASES[args.base]
     workloads = [zoo_workload(n, scale=args.scale) for n in names[:n_w]]
-    cfgs = default_grid(base, n_c)
+    if args.sample_lat or args.sample_disp:
+        cfgs = sample_table_grid(base, n_c, args.sample_lat,
+                                 args.sample_disp)
+    else:
+        cfgs = default_grid(base, n_c)
 
     mesh = None
     if args.mesh:
@@ -103,6 +114,14 @@ def main(argv=None):
     ap.add_argument("--mesh", nargs=2, type=int, metavar=("A", "B"),
                     help="with --grid: distribute over a 2-D ('cfg','sm') "
                          "mesh — A cfg-devices × B sm-devices")
+    ap.add_argument("--sample-lat", nargs=3, action="append", default=[],
+                    metavar=("CLASS", "LO", "HI"),
+                    help="with --grid: config lanes step the per-class "
+                         "result latency of CLASS from LO to HI")
+    ap.add_argument("--sample-disp", nargs=3, action="append", default=[],
+                    metavar=("CLASS", "LO", "HI"),
+                    help="with --grid: config lanes step the per-class "
+                         "dispatch interval of CLASS from LO to HI")
     ap.add_argument("--base", choices=sorted(BASES), default="tiny")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--max-cycles", type=int, default=1 << 15)
@@ -110,6 +129,9 @@ def main(argv=None):
                     help="with --grid: verify every lane vs a solo run")
     args = ap.parse_args(argv)
 
+    if (args.sample_lat or args.sample_disp) and not args.grid:
+        raise SystemExit("--sample-lat/--sample-disp shape the config grid "
+                         "and need --grid W C")
     if args.list:
         for n in zoo_names():
             print(n)

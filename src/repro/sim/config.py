@@ -16,31 +16,171 @@ Timing abstraction (documented deviations from Accel-sim in DESIGN.md):
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, fields
 
+import jax
 import jax.numpy as jnp
+from jax.tree_util import register_dataclass
 
 # instruction classes (BAR = CTA-level barrier, __syncthreads)
 FP32, INT32, SFU, TENSOR, LDG, STG, BAR = range(7)
 N_CLASSES = 7
+CLASS_NAMES = ("fp32", "int32", "sfu", "tensor", "ldg", "stg", "bar")
 # execution units (per sub-core dispatch ports)
 U_FP32, U_INT, U_SFU, U_TENSOR, U_LSU = range(5)
 N_UNITS = 5
 
+# class → execution unit is STRUCTURAL (which port an op occupies), not a
+# timing numeric — it stays a static table baked into the program.
 UNIT_OF_CLASS = (U_FP32, U_INT, U_SFU, U_TENSOR, U_LSU, U_LSU, U_INT)
-# result latency per class (LDG latency is cache-dependent)
+# default result latency per class (LDG latency is cache-dependent and
+# comes from cache.l1_hit_lat / the memory system, so its entry is inert)
 LATENCY_OF_CLASS = (4, 4, 16, 8, 0, 0, 1)
-# dispatch interval (cycles the port stays busy per issue)
+# default dispatch interval (cycles the port stays busy per issue)
 DISPATCH_OF_CLASS = (1, 1, 4, 2, 1, 1, 1)
 
 # warp scheduler selector (a *dynamic* config value — traced, vmappable)
 SCHED_GTO, SCHED_LRR = 0, 1
 SCHEDULERS = {"gto": SCHED_GTO, "lrr": SCHED_LRR}
 
-# timing parameters that are plain numerics inside the compiled program:
-# they may differ lane-by-lane in a batched design-space sweep.
+# scalar timing parameters that are plain numerics inside the compiled
+# program: they may differ lane-by-lane in a batched design-space sweep.
 DYNAMIC_FIELDS = ("l1_hit_lat", "l2_lat", "part_lat", "dram_burst",
                   "dram_row_penalty", "icnt_lat")
+# table-valued dynamic leaves, (N_CLASSES,) each
+TABLE_FIELDS = ("lat", "disp")
+# every flat key split_config understands (the wire format of overrides)
+DYN_KEYS = DYNAMIC_FIELDS + ("sched",) + TABLE_FIELDS
+
+
+def class_index(name: str) -> int:
+    """Instruction-class index by name ('fp32', 'sfu', ...)."""
+    try:
+        return CLASS_NAMES.index(name.lower())
+    except ValueError:
+        raise ValueError(
+            f"unknown instruction class {name!r}; expected one of "
+            f"{CLASS_NAMES}") from None
+
+
+# ---------------------------------------------------------------------------
+# DynConfig — the typed dynamic half of a GPU config
+# ---------------------------------------------------------------------------
+
+@register_dataclass
+@dataclass(frozen=True)
+class CoreDyn:
+    """SM-core timing: per-class tables + the scheduler selector.
+
+    ``lat[c]`` — result latency of instruction class ``c`` (N_CLASSES,);
+    the LDG entry is inert (load latency is cache-dependent: l1_hit_lat on
+    a hit, memory-system response on a miss).  ``disp[c]`` — dispatch
+    interval: cycles the issue port stays busy per issue.  ``sched`` —
+    SCHED_GTO / SCHED_LRR, branchless inside the program."""
+    lat: jax.Array
+    disp: jax.Array
+    sched: jax.Array
+
+
+@register_dataclass
+@dataclass(frozen=True)
+class CacheDyn:
+    l1_hit_lat: jax.Array
+    l2_lat: jax.Array
+
+
+@register_dataclass
+@dataclass(frozen=True)
+class MemDyn:
+    part_lat: jax.Array
+    dram_burst: jax.Array
+    dram_row_penalty: jax.Array
+
+
+@register_dataclass
+@dataclass(frozen=True)
+class IcntDyn:
+    icnt_lat: jax.Array
+
+
+# flat key → (group attr, leaf attr): the mapping between the legacy flat
+# override dict and the typed tree
+_FLAT_TO_GROUP = {
+    "lat": ("core", "lat"), "disp": ("core", "disp"),
+    "sched": ("core", "sched"),
+    "l1_hit_lat": ("cache", "l1_hit_lat"), "l2_lat": ("cache", "l2_lat"),
+    "part_lat": ("mem", "part_lat"), "dram_burst": ("mem", "dram_burst"),
+    "dram_row_penalty": ("mem", "dram_row_penalty"),
+    "icnt_lat": ("icnt", "icnt_lat"),
+}
+
+
+@register_dataclass
+@dataclass(frozen=True)
+class DynConfig:
+    """Typed, registered pytree of every traced timing parameter.
+
+    Grouped by machine layer: ``core`` (per-class latency/dispatch tables
+    + scheduler selector), ``cache`` (L1/L2 latencies), ``mem`` (partition
+    + DRAM timing), ``icnt`` (interconnect latency).  Every leaf is an
+    int32 array inside the compiled program, so a lane-stacked batch of
+    DynConfigs (core/sweep.py:stack_dyn) vmaps/shards the whole engine
+    over configs — including the (N_CLASSES,) tables, which ride along as
+    (n_lanes, N_CLASSES) leaves."""
+    core: CoreDyn
+    cache: CacheDyn
+    mem: MemDyn
+    icnt: IcntDyn
+
+    @classmethod
+    def from_flat(cls, src: dict) -> "DynConfig":
+        """Build from a flat {key: value} dict (DYN_KEYS complete)."""
+        groups = {"core": {}, "cache": {}, "mem": {}, "icnt": {}}
+        for k, v in src.items():
+            g, leaf = _FLAT_TO_GROUP[k]
+            groups[g][leaf] = jnp.asarray(v, jnp.int32)
+        return cls(core=CoreDyn(**groups["core"]),
+                   cache=CacheDyn(**groups["cache"]),
+                   mem=MemDyn(**groups["mem"]),
+                   icnt=IcntDyn(**groups["icnt"]))
+
+    def flat(self) -> dict:
+        """The inverse of ``from_flat`` — flat {key: array} view."""
+        return {k: getattr(getattr(self, g), leaf)
+                for k, (g, leaf) in _FLAT_TO_GROUP.items()}
+
+
+def _concrete_int(x):
+    """Python int of a concrete scalar, or None when traced/abstract."""
+    try:
+        return int(x)
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return None
+
+
+def check_dyn(static: "StaticConfig", dyn: DynConfig, lane: str = "") -> None:
+    """Python-level (pre-trace) validation of one dynamic lane against its
+    StaticConfig: table shapes are (N_CLASSES,) and the machine invariant
+    quantum Δ ≤ icnt_lat holds (SM shards run one full quantum between
+    memory exchanges — a lane violating it would let a response land
+    inside the current window and silently diverge from sequential
+    semantics).  Concrete values only; traced leaves are skipped."""
+    where = f"{lane}: " if lane else ""
+    for name in TABLE_FIELDS:
+        tbl = getattr(dyn.core, name)
+        if tuple(tbl.shape) != (N_CLASSES,):
+            raise ValueError(
+                f"{where}dyn table '{name}' must have shape ({N_CLASSES},) "
+                f"(one entry per instruction class {CLASS_NAMES}), got "
+                f"{tuple(tbl.shape)}")
+    icnt = _concrete_int(dyn.icnt.icnt_lat)
+    if icnt is not None and static.quantum > icnt:
+        raise ValueError(
+            f"{where}quantum Δ={static.quantum} must be ≤ icnt_lat={icnt} "
+            "(SM shards run one full quantum between memory exchanges; "
+            "this lane would break the exactness window)")
 
 
 @dataclass(frozen=True)
@@ -77,26 +217,99 @@ def static_part(cfg) -> StaticConfig:
         **{f.name: getattr(cfg, f.name) for f in fields(StaticConfig)})
 
 
-def split_config(cfg: "GPUConfig | StaticConfig", dyn_overrides=None):
-    """(GPUConfig) -> (StaticConfig, dynamic pytree).
+_warned_flat = False
 
-    The dynamic pytree is a flat dict of int32 scalars — every leaf is a
-    traced value inside the compiled simulator, so a stacked batch of them
-    (one lane per candidate config) vmaps the whole engine over configs.
-    ``sched`` carries the scheduler selector (SCHED_GTO / SCHED_LRR).
+
+def _warn_flat_once() -> None:
+    global _warned_flat
+    if not _warned_flat:
+        _warned_flat = True
+        warnings.warn(
+            "split_config received a legacy flat dynamic dict without the "
+            "per-class 'lat'/'disp' tables; defaulting them to "
+            "LATENCY_OF_CLASS / DISPATCH_OF_CLASS.  Pass table entries "
+            "(or a DynConfig) to silence this.", DeprecationWarning,
+            stacklevel=3)
+
+
+def _check_override_keys(src: dict, need_all: bool) -> None:
+    """ValueError naming unknown (always) and missing (when the dict must
+    be self-contained, i.e. no GPUConfig to fall back on) override keys.
+    The table keys are exempt from 'missing' — the legacy flat dict
+    predates them and is shimmed to the default tables."""
+    unknown = sorted(set(src) - set(DYN_KEYS))
+    if unknown:
+        raise ValueError(
+            f"unknown dynamic override key(s) {unknown}; valid keys are "
+            f"{sorted(DYN_KEYS)}")
+    if need_all:
+        missing = sorted(set(DYNAMIC_FIELDS + ("sched",)) - set(src))
+        if missing:
+            raise ValueError(
+                f"missing dynamic override key(s) {missing}: a StaticConfig "
+                "carries no timing values, so the override dict must supply "
+                f"every scalar field {sorted(DYNAMIC_FIELDS + ('sched',))} "
+                f"(tables {TABLE_FIELDS} default to the class tables)")
+
+
+def split_config(cfg: "GPUConfig | StaticConfig", dyn_overrides=None):
+    """(GPUConfig) -> (StaticConfig, DynConfig).
+
+    The dynamic half is a typed, registered pytree (``DynConfig``) whose
+    leaves — scalar latencies, the scheduler selector, and the per-class
+    ``lat``/``disp`` tables — are all traced int32 values inside the
+    compiled simulator, so a stacked batch of them (one lane per candidate
+    config) vmaps the whole engine over configs.
+
+    ``dyn_overrides`` may be a ``DynConfig`` (used as-is) or a flat dict
+    keyed by ``DYN_KEYS``.  Unknown/missing keys raise ``ValueError`` by
+    name; table overrides are length-checked against ``N_CLASSES`` here,
+    at split time.  A legacy flat dict without the ``lat``/``disp`` table
+    keys is accepted (they default to the module class tables) with a
+    one-time ``DeprecationWarning``.
     """
     if isinstance(cfg, StaticConfig):
         if dyn_overrides is None:
             raise ValueError("StaticConfig alone has no dynamic values")
         static = cfg
+        if isinstance(dyn_overrides, DynConfig):
+            check_dyn(static, dyn_overrides)
+            return static, dyn_overrides
         src = dict(dyn_overrides)
+        _check_override_keys(src, need_all=True)
+        have = [k for k in TABLE_FIELDS if k in src]
+        if not have:                     # legacy flat dict: shim + warn once
+            _warn_flat_once()
+            src["lat"] = LATENCY_OF_CLASS
+            src["disp"] = DISPATCH_OF_CLASS
+        elif len(have) == 1:             # one table alone is never intended
+            missing = set(TABLE_FIELDS) - set(have)
+            raise ValueError(
+                f"dynamic override supplies table {have} but not "
+                f"{sorted(missing)}: pass both tables (or neither, for the "
+                "legacy default-table shim)")
     else:
         static = static_part(cfg)
+        if isinstance(dyn_overrides, DynConfig):
+            check_dyn(static, dyn_overrides)
+            return static, dyn_overrides
         src = {k: getattr(cfg, k) for k in DYNAMIC_FIELDS}
         src["sched"] = SCHEDULERS[cfg.scheduler]
+        src["lat"] = cfg.lat_of_class
+        src["disp"] = cfg.disp_of_class
         if dyn_overrides:
-            src.update(dyn_overrides)
-    dyn = {k: jnp.asarray(v, jnp.int32) for k, v in src.items()}
+            overrides = dict(dyn_overrides)
+            _check_override_keys(overrides, need_all=False)
+            src.update(overrides)
+    for name in TABLE_FIELDS:
+        shape = tuple(jnp.shape(src[name]))
+        if shape != (N_CLASSES,):
+            raise ValueError(
+                f"dynamic table '{name}' must have {N_CLASSES} entries "
+                f"(one per instruction class {CLASS_NAMES}), got shape "
+                f"{shape}")
+    dyn = DynConfig.from_flat(src)
+    check_dyn(static, dyn)
     return static, dyn
 
 
@@ -131,6 +344,10 @@ class GPUConfig:
     addrset_cap: int = 2048      # per-SM unique-address stat set
     scheduler: str = "gto"       # gto | lrr
     mem_blocks: int = 1 << 22    # simulated VRAM in 128 B blocks
+    # per-class timing tables (dynamic: sweepable lane-by-lane).  The LDG
+    # latency entry is inert — load latency is cache-dependent.
+    lat_of_class: tuple = LATENCY_OF_CLASS
+    disp_of_class: tuple = DISPATCH_OF_CLASS
 
     def __post_init__(self):
         assert self.quantum <= self.icnt_lat, (
@@ -139,6 +356,15 @@ class GPUConfig:
         assert self.warps_per_sm % self.n_subcores == 0, (
             f"warps_per_sm={self.warps_per_sm} must be divisible by "
             f"n_subcores={self.n_subcores}")
+        for name in ("lat_of_class", "disp_of_class"):
+            tbl = getattr(self, name)
+            if not isinstance(tbl, tuple):       # keep the config hashable
+                object.__setattr__(self, name, tuple(int(v) for v in tbl))
+                tbl = getattr(self, name)
+            if len(tbl) != N_CLASSES:
+                raise ValueError(
+                    f"{name} must have {N_CLASSES} entries (one per "
+                    f"instruction class {CLASS_NAMES}), got {len(tbl)}")
 
 
 RTX3080TI = GPUConfig()

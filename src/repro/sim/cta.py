@@ -15,7 +15,9 @@ from repro.sim.config import StaticConfig
 def cta_issue(warp: dict, ctrl: dict, stats: dict, trace: dict,
               cfg: StaticConfig):
     """Dispatch CTAs to free warp slots.  Deliberately takes only the
-    static config: dispatch depends on shape/capacity fields alone, so a
+    static config — no ``DynConfig``: dispatch depends on shape/capacity
+    fields alone (none of the typed dynamic groups — core timing tables,
+    cache/mem/icnt latencies — can affect WHICH warp slots fill), so a
     vmapped config sweep (core/sweep.py) shares this logic across lanes
     with no per-lane dynamic inputs."""
     ns, w = warp["active"].shape

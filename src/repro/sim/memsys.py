@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.sim.config import StaticConfig
+from repro.sim.config import DynConfig, StaticConfig
 
 BIG = jnp.int32(1 << 30)
 
@@ -61,12 +61,13 @@ def _lex_sort(primary, secondary, tertiary, valid):
 
 
 def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: StaticConfig,
-              dyn: dict, sm_ids=None):
+              dyn: DynConfig, sm_ids=None):
     """Process the event horizon [t0, t0+Δ). Returns (req, mem, stats).
 
-    cfg is the hashable static shape config; dyn carries the traced timing
-    parameters (l2_lat, part_lat, icnt_lat, dram_burst, dram_row_penalty)
-    so a vmapped config sweep varies them per lane.
+    cfg is the hashable static shape config; dyn is the typed DynConfig of
+    traced timing parameters (dyn.cache.l2_lat, dyn.mem.part_lat /
+    dram_burst / dram_row_penalty, dyn.icnt.icnt_lat) so a vmapped config
+    sweep varies them per lane.
 
     sm_ids: (n_sm,) ORIGINAL SM id per array position — canonical tie-break
     order must follow original ids so results are invariant under SM-axis
@@ -107,8 +108,8 @@ def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: StaticConfig,
     hit = jnp.any(ways == o_addr[:, None], axis=1) & o_sel
     miss = o_sel & ~hit
 
-    resp_t = start + dyn["l2_lat"] + dyn["icnt_lat"]
-    dram_t = start + dyn["l2_lat"] + dyn["part_lat"]
+    resp_t = start + dyn.cache.l2_lat + dyn.icnt.icnt_lat
+    dram_t = start + dyn.cache.l2_lat + dyn.mem.part_lat
 
     new_stage = jnp.where(hit, 3, jnp.where(miss, 2, stage[order]))
     new_t = jnp.where(hit, resp_t, jnp.where(miss, dram_t, o_t))
@@ -156,12 +157,12 @@ def mem_phase(req: dict, mem: dict, stats: dict, t0, cfg: StaticConfig,
     prev_row = jnp.concatenate([jnp.full((1,), -2, jnp.int32), o_row[:-1]])
     prev_row = jnp.where(seg2, mem["dram_row"][ch_c], prev_row)
     row_hit = (o_row == prev_row) & o_sel2
-    service2 = jnp.where(row_hit, dyn["dram_burst"],
-                         dyn["dram_burst"] + dyn["dram_row_penalty"])
+    service2 = jnp.where(row_hit, dyn.mem.dram_burst,
+                         dyn.mem.dram_burst + dyn.mem.dram_row_penalty)
     arrival2 = jnp.maximum(o_t2, mem["dram_busy"][ch_c])
     finish2 = _seg_maxplus(seg2, service2, arrival2)
 
-    resp2 = finish2 + dyn["part_lat"] + dyn["icnt_lat"]
+    resp2 = finish2 + dyn.mem.part_lat + dyn.icnt.icnt_lat
     stage = stage.at[o_rid2].set(jnp.where(o_sel2, 3, stage[o_rid2]))
     t = t.at[o_rid2].set(jnp.where(o_sel2, resp2, t[o_rid2]))
 

@@ -11,18 +11,22 @@ allocate an MSHR row that the memory phase will service next quantum),
 update the scoreboard-lite dependency state and the per-SM stats.
 
 Config threading: every function takes the hashable ``StaticConfig`` (shape
-decisions: array sizes, loop bounds, sub-core count) plus the ``dyn`` pytree
-of traced timing parameters (latencies + scheduler selector).  Nothing
-numeric is closed over as a Python constant, so the whole SM phase vmaps
-over a batch of dynamic configs (core/sweep.py).
+decisions: array sizes, loop bounds, sub-core count) plus the typed
+``DynConfig`` pytree of traced timing parameters — including the per-class
+result-latency (``dyn.core.lat``) and dispatch-interval (``dyn.core.disp``)
+tables, which are indexed as traced arrays here, never baked in as module
+constants.  Nothing numeric is closed over as a Python constant, so the
+whole SM phase vmaps over a batch of dynamic configs (core/sweep.py) —
+per-class timing included.  Only the class→unit port mapping
+(``UNIT_OF_CLASS``) stays static: it is structural, not a timing numeric.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.sim.config import (BAR, DISPATCH_OF_CLASS, LATENCY_OF_CLASS, LDG,
-                              SCHED_GTO, STG, StaticConfig, UNIT_OF_CLASS)
+from repro.sim.config import (BAR, LDG, SCHED_GTO, STG, DynConfig,
+                              StaticConfig, UNIT_OF_CLASS)
 from repro.sim.trace import gen_address
 
 BIG = jnp.int32(1 << 30)
@@ -90,7 +94,7 @@ def _addrset_insert(sm, addr, enable, cfg: StaticConfig):
 
 
 def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
-                   dyn: dict):
+                   dyn: DynConfig):
     """Issue at most one instruction on sub-core `sc` (single SM view)."""
     nsc = cfg.n_subcores
     w_ids = jnp.arange(sc, cfg.warps_per_sm, nsc, dtype=jnp.int32)
@@ -116,7 +120,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
     greedy = w_ids == sm["last_issued"][sc]
     key_gto = jnp.where(greedy, -1, w_ids)
     key_lrr = (w_ids - sm["last_issued"][sc] - 1) % cfg.warps_per_sm
-    key = jnp.where(dyn["sched"] == SCHED_GTO, key_gto, key_lrr)
+    key = jnp.where(dyn.core.sched == SCHED_GTO, key_gto, key_lrr)
     key = jnp.where(cand, key, BIG)
     sel = jnp.argmin(key)
     do = cand[sel]
@@ -147,7 +151,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
         addr=req["addr"].at[row].set(
             jnp.where(alloc, addr, req["addr"][row])),
         t=req["t"].at[row].set(
-            jnp.where(alloc, t + dyn["icnt_lat"], req["t"][row])),
+            jnp.where(alloc, t + dyn.icnt.icnt_lat, req["t"][row])),
         warp=req["warp"].at[row].set(
             jnp.where(alloc, wsel, req["warp"][row])),
         is_store=req["is_store"].at[row].set(
@@ -155,8 +159,8 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
     )
 
     # ---- dependency / latency ----------------------------------------------
-    lat = jnp.asarray(LATENCY_OF_CLASS, jnp.int32)[sop]
-    lat = jnp.where(sop == LDG, jnp.where(hit, dyn["l1_hit_lat"], 1), lat)
+    lat = dyn.core.lat[sop]
+    lat = jnp.where(sop == LDG, jnp.where(hit, dyn.cache.l1_hit_lat, 1), lat)
     dep_next = jnp.where(spc + 1 < n_instr, trace["dep"][
         jnp.clip(spc + 1, 0, n_instr - 1)], False)
     wait_lat = jnp.where(dep_next, jnp.maximum(lat, 1), 1)
@@ -177,7 +181,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
         pending=warp["pending"].at[wsel].set(
             jnp.where(do, new_pending, warp["pending"][wsel])),
     )
-    disp = jnp.asarray(DISPATCH_OF_CLASS, jnp.int32)[sop]
+    disp = dyn.core.disp[sop]
     sm = dict(
         sm,
         unit_free=sm["unit_free"].at[sc, sunit].set(
@@ -197,7 +201,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
 
 
 def sm_cycle_single(warp, sm, req, stats, trace, t, cfg: StaticConfig,
-                    dyn: dict):
+                    dyn: DynConfig):
     """One cycle of one SM (arrays without the n_sm axis)."""
     warp, req = _deliver(warp, req, t)
     warp = _release_barriers(warp, trace["n_instr"], t)
@@ -216,7 +220,7 @@ def sm_cycle_single(warp, sm, req, stats, trace, t, cfg: StaticConfig,
 
 
 def sm_quantum_single(warp, sm, req, stats, trace, t0, cfg: StaticConfig,
-                      dyn: dict):
+                      dyn: DynConfig):
     """Run Δ consecutive cycles for one SM — the communication window."""
     def body(i, carry):
         warp, sm, req, stats = carry

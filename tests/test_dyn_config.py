@@ -1,0 +1,191 @@
+"""Typed DynConfig pytree: split-time validation, the flat-dict
+compatibility shim, sweep-build-time invariant checks, and the acceptance
+property of the table-valued refactor — DEFAULT tables reproduce the
+untouched determinism golden bit-exactly while perturbed-table lanes are
+per-lane distinct inside the same compiled sweep."""
+import dataclasses
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.sim.config as C
+from repro.core import stats as S
+from repro.core.sweep import stack_dyn, sweep
+from repro.sim.config import (DISPATCH_OF_CLASS, LATENCY_OF_CLASS, N_CLASSES,
+                              TINY, DynConfig, GPUConfig, check_dyn,
+                              class_index, split_config, static_part)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "determinism_tiny.json")
+MAX_CYCLES = 1 << 15
+
+
+def flat_scalars():
+    """A legacy flat override dict (scalars + sched, no tables)."""
+    d = split_config(TINY)[1].flat()
+    return {k: int(v) for k, v in d.items() if k not in ("lat", "disp")}
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def test_split_returns_typed_pytree_with_default_tables():
+    scfg, dyn = split_config(TINY)
+    assert isinstance(dyn, DynConfig)
+    assert tuple(int(v) for v in dyn.core.lat) == LATENCY_OF_CLASS
+    assert tuple(int(v) for v in dyn.core.disp) == DISPATCH_OF_CLASS
+    # 9 leaves: 2 tables + sched + 2 cache + 3 mem + 1 icnt
+    assert len(jax.tree_util.tree_leaves(dyn)) == 9
+    # flat() is the exact inverse wire format of from_flat()
+    again = DynConfig.from_flat(dyn.flat())
+    assert jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda a, b: jnp.array_equal(a, b),
+                               dyn, again))
+
+
+def test_stack_dyn_table_leaf_shapes():
+    cfgs = [TINY, dataclasses.replace(TINY, l2_lat=64)]
+    _, batch = stack_dyn(cfgs)
+    assert batch.core.lat.shape == (2, N_CLASSES)
+    assert batch.core.disp.shape == (2, N_CLASSES)
+    assert batch.cache.l2_lat.shape == (2,)
+    assert [int(v) for v in batch.cache.l2_lat] == [32, 64]
+
+
+def test_class_index():
+    assert class_index("fp32") == 0 and class_index("BAR") == 6
+    with pytest.raises(ValueError, match="unknown instruction class"):
+        class_index("fp64")
+
+
+# ---------------------------------------------------------------------------
+# split-time validation (satellite: clear ValueError, not downstream KeyError)
+# ---------------------------------------------------------------------------
+
+def test_unknown_override_key_named():
+    with pytest.raises(ValueError, match=r"unknown.*\['bogus'\]"):
+        split_config(TINY, {"bogus": 3})
+
+
+def test_missing_override_keys_named():
+    with pytest.raises(ValueError, match=r"missing.*'icnt_lat'"):
+        split_config(static_part(TINY), {"l2_lat": 32, "sched": 0})
+
+
+def test_table_override_length_checked_at_split():
+    with pytest.raises(ValueError, match=r"'lat' must have 7 entries"):
+        split_config(TINY, {"lat": (1, 2, 3)})
+    with pytest.raises(ValueError, match=r"'disp' must have 7 entries"):
+        split_config(TINY, {"disp": list(range(9))})
+
+
+def test_gpuconfig_table_length_checked():
+    with pytest.raises(ValueError, match="lat_of_class must have 7"):
+        GPUConfig(lat_of_class=(4, 4))
+
+
+def test_flat_dict_shim_warns_once_and_defaults_tables():
+    C._warned_flat = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        _, d1 = split_config(static_part(TINY), flat_scalars())
+        _, d2 = split_config(static_part(TINY), flat_scalars())
+    assert [w.category for w in rec] == [DeprecationWarning]
+    for d in (d1, d2):
+        assert tuple(int(v) for v in d.core.lat) == LATENCY_OF_CLASS
+        assert tuple(int(v) for v in d.core.disp) == DISPATCH_OF_CLASS
+    # shimmed flat dict and GPUConfig route agree leaf-for-leaf
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: jnp.array_equal(a, b), d1, split_config(TINY)[1]))
+
+
+def test_single_table_override_rejected():
+    """'lat' without 'disp' (or vice versa) is never what the caller
+    meant — neither the legacy shim nor a full table override."""
+    over = dict(flat_scalars(), lat=LATENCY_OF_CLASS)
+    with pytest.raises(ValueError, match=r"but not \['disp'\]"):
+        split_config(static_part(TINY), over)
+
+
+def test_dynconfig_passthrough():
+    scfg, dyn = split_config(TINY)
+    scfg2, dyn2 = split_config(scfg, dyn)
+    assert scfg2 is scfg and dyn2 is dyn
+
+
+# ---------------------------------------------------------------------------
+# quantum ≤ icnt_lat invariant on the dynamic path (satellite)
+# ---------------------------------------------------------------------------
+
+def test_icnt_invariant_enforced_at_split():
+    over = dict(flat_scalars(), icnt_lat=TINY.quantum - 1,
+                lat=LATENCY_OF_CLASS, disp=DISPATCH_OF_CLASS)
+    with pytest.raises(ValueError, match="must be ≤ icnt_lat"):
+        split_config(static_part(TINY), over)
+
+
+def test_icnt_invariant_enforced_at_sweep_build_with_lane():
+    """The flat-dict lane route through stack_dyn — the path that used to
+    bypass GPUConfig.__post_init__ — is rejected before any trace, naming
+    the offending lane."""
+    bad = dict(flat_scalars(), icnt_lat=8,
+               lat=LATENCY_OF_CLASS, disp=DISPATCH_OF_CLASS)
+    with pytest.raises(ValueError, match=r"config lane 1:.*icnt_lat=8"):
+        stack_dyn([TINY, (static_part(TINY), bad)])
+
+
+def test_check_dyn_skips_traced_leaves():
+    scfg, dyn = split_config(TINY)
+
+    def f(d):
+        check_dyn(scfg, d)      # traced icnt_lat: must not concretize
+        return d.icnt.icnt_lat * 1
+    assert int(jax.jit(f)(dyn)) == TINY.icnt_lat
+
+
+def test_stack_dyn_accepts_presplit_lanes():
+    """(StaticConfig, overrides) lanes — the raw-table DSE-search route —
+    stack against full GPUConfig lanes."""
+    scfg = static_part(TINY)
+    lat = list(LATENCY_OF_CLASS)
+    lat[class_index("fp32")] = 9
+    over = dict(flat_scalars(), lat=tuple(lat), disp=DISPATCH_OF_CLASS)
+    scfg2, batch = stack_dyn([TINY, (scfg, over)])
+    assert scfg2 == scfg
+    assert [int(v) for v in batch.core.lat[:, 0]] == [4, 9]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: default tables reproduce the golden; perturbed lanes distinct
+# ---------------------------------------------------------------------------
+
+def test_default_table_lane_matches_untouched_golden():
+    """One compiled sweep where lane 0 has the default tables and lane 1 a
+    perturbed dispatch table: lane 0 must equal the committed golden
+    (which predates the table-valued refactor and is NOT regenerated),
+    lane 1 must differ — table sweeps explore, defaults stay bit-exact."""
+    from repro.workloads import make_workload
+    w = make_workload("hotspot", scale=0.02)
+    cfgs = [TINY,
+            dataclasses.replace(TINY, disp_of_class=(3, 2, 6, 4, 1, 1, 1))]
+    result = sweep(w, cfgs, max_cycles=MAX_CYCLES)
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)["hotspot@0.02"]
+    assert S.comparable(result.stats[0]) == golden
+    assert S.comparable(result.stats[1]) != golden
+
+
+def test_lat_table_lane_distinct_on_compute_bound_workload():
+    """Result-latency perturbation must change a compute-bound lane (the
+    memory-bound hotspot golden case is latency-insensitive by design)."""
+    from repro.sim.workloads import zoo_workload
+    w = zoo_workload("tensor_heavy", scale=0.02)
+    cfgs = [TINY,
+            dataclasses.replace(TINY, lat_of_class=(24, 12, 48, 32, 0, 0, 1))]
+    result = sweep(w, cfgs, max_cycles=MAX_CYCLES)
+    assert S.comparable(result.stats[0]) != S.comparable(result.stats[1])

@@ -24,11 +24,16 @@ SCRIPT = textwrap.dedent("""
     from repro.sim.workloads import zoo_workload
 
     MAX = 1 << 14
+    # lane 2 perturbs the per-class lat table, lane 3 the disp table, so
+    # the (n_lanes, N_CLASSES) DynConfig table leaves are exercised under
+    # P('cfg') sharding at every mesh shape
     cfgs = [TINY,
             dataclasses.replace(TINY, scheduler="lrr"),
-            dataclasses.replace(TINY, l2_lat=64, dram_row_penalty=48),
+            dataclasses.replace(TINY, l2_lat=64, dram_row_penalty=48,
+                                lat_of_class=(24, 12, 48, 32, 0, 0, 1)),
             dataclasses.replace(TINY, l1_hit_lat=16, icnt_lat=24,
-                                scheduler="lrr")]
+                                scheduler="lrr",
+                                disp_of_class=(3, 2, 6, 4, 1, 1, 1))]
     ws = [zoo_workload(n, scale=0.02) for n in ("gemm_tiled", "mixed")]
 
     def sig(st):
