@@ -19,6 +19,18 @@ SIM_SCALE = float(os.environ.get("REPRO_SIM_SCALE", "0.03"))
 MAX_CYCLES = int(os.environ.get("REPRO_SIM_MAX_CYCLES", str(1 << 17)))
 
 
+def grid_workload_names(n: int) -> list:
+    """Workload rows for the grid benchmarks: ``REPRO_GRID_WORKLOADS``
+    (comma-separated; zoo names, ``trace:<x>`` and Table-2 names all
+    resolve via sim/workloads.py:resolve_workload) or the first ``n``
+    zoo entries."""
+    env = os.environ.get("REPRO_GRID_WORKLOADS", "")
+    if env:
+        return [s for s in (t.strip() for t in env.split(",")) if s]
+    from repro.sim.workloads import zoo_names
+    return zoo_names()[:n]
+
+
 def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     for _ in range(warmup):
         fn(*args)

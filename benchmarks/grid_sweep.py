@@ -19,28 +19,38 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
-from repro.core.batch import stack_kernels, stack_workloads
+from benchmarks.common import (MAX_CYCLES, SIM_SCALE, grid_workload_names,
+                               save_json, timeit)
+from repro.core.batch import (check_workload_fits, stack_kernels,
+                              stack_workloads)
 from repro.core.engine import run_workload_stacked
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import make_grid_runner, stack_dyn
 from repro.launch.dse import default_grid
 from repro.sim.config import TINY, split_config
 from repro.sim.state import init_state
-from repro.sim.workloads import zoo_names, zoo_workload
+from repro.sim.workloads import resolve_workload
 
 N_WORKLOADS = 4
 N_CONFIGS = 4
 
 
 def run() -> list[dict]:
-    names = zoo_names()[:N_WORKLOADS]
-    workloads = [zoo_workload(n, scale=SIM_SCALE) for n in names]
+    # names may mix namespaces (zoo / trace:<x> / Table-2) — set
+    # REPRO_GRID_WORKLOADS=trace:vecadd,gemm_tiled,... to rebench on
+    # real-trace rows; trace rows keep their real CTA counts
+    names = grid_workload_names(N_WORKLOADS)
+    workloads = [resolve_workload(
+        n, scale=1.0 if n.startswith("trace:") else SIM_SCALE)
+        for n in names]
     cfgs = default_grid(TINY, N_CONFIGS)
     scfg, dyn_batch = stack_dyn(cfgs)
+    for w in workloads:
+        check_workload_fits(scfg, w)
     stacked = stack_workloads(workloads)
     max_cycles = min(MAX_CYCLES, 1 << 15)
-    lanes = N_WORKLOADS * N_CONFIGS
+    n_w = len(workloads)
+    lanes = n_w * N_CONFIGS
 
     batched = make_grid_runner(scfg, max_cycles=max_cycles)
     t_batch = timeit(
@@ -67,17 +77,17 @@ def run() -> list[dict]:
     t_loop = timeit(loop, warmup=1, iters=3)
 
     rows = [{
-        "name": f"grid/batched_{N_WORKLOADS}x{N_CONFIGS}",
+        "name": f"grid/batched_{n_w}x{N_CONFIGS}",
         "us_per_call": t_batch * 1e6,
         "derived": f"lanes_per_s={lanes / t_batch:.2f}",
     }, {
-        "name": f"grid/loop_{N_WORKLOADS}x{N_CONFIGS}",
+        "name": f"grid/loop_{n_w}x{N_CONFIGS}",
         "us_per_call": t_loop * 1e6,
         "derived": (f"lanes_per_s={lanes / t_loop:.2f} "
                     f"speedup={t_loop / t_batch:.2f}x"),
     }]
     save_json("grid_sweep", {
-        "n_workloads": N_WORKLOADS, "n_configs": N_CONFIGS,
+        "n_workloads": n_w, "n_configs": N_CONFIGS,
         "workloads": names, "scale": SIM_SCALE, "max_cycles": max_cycles,
         "t_batched_s": t_batch, "t_loop_s": t_loop,
         "speedup": t_loop / t_batch,

@@ -13,6 +13,7 @@ uploads so the perf trajectory is comparable across commits.
   grid  — batched workloads × configs grid vs solo loop     (zoo frontend)
   mesh  — distributed grid sweep vs 2-D ('cfg','sm') mesh shape
   tables — table-valued vs scalar-only dyn pytree lanes/sec (DynConfig)
+  traces — real-trace ingest time + trace-row vs zoo-row lanes/sec
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
@@ -32,7 +33,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: fig1 fig5 fig6 fig7 det dse grid mesh "
-                         "tables roofline kernels")
+                         "tables traces roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     args = ap.parse_args()
@@ -40,7 +41,7 @@ def main() -> None:
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
                             grid_sweep, kernels_bench, mesh_sweep, roofline,
-                            table_sweep)
+                            table_sweep, traces_bench)
     from benchmarks.common import save_bench
 
     suites = {
@@ -55,6 +56,7 @@ def main() -> None:
         "grid": grid_sweep.run,
         "mesh": (lambda: mesh_sweep.run(fast=args.fast)),
         "tables": table_sweep.run,
+        "traces": traces_bench.run,
     }
     rows = []
     failed = False

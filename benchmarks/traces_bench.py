@@ -1,0 +1,84 @@
+"""Real-trace ingestion benchmark (BENCH_traces.json).
+
+Three numbers for the trace front-end (sim/traceio.py):
+
+  traces/ingest      — parse + address-fit + lower time for every
+                       bundled fixture (the front-end's fixed cost; it
+                       runs once per trace, off the compiled path)
+  traces/grid_trace  — (trace workloads × C configs) grid_sweep
+                       lanes/sec: trace-derived rows through the SAME
+                       batched path the synthetic zoo uses
+  traces/grid_zoo    — an equally-sized synthetic grid for comparison
+                       (same lane count, zoo workloads)
+
+The comparison prices what real-app rows cost relative to synthetic
+rows in the batched program — trace kernels are typically shorter but
+less regular, so the straggler tax differs.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from benchmarks.common import MAX_CYCLES, REPO, SIM_SCALE, save_json, timeit
+from repro.core.sweep import grid_sweep
+from repro.launch.dse import default_grid
+from repro.sim import traceio
+from repro.sim.config import TINY
+from repro.sim.workloads import zoo_names, zoo_workload
+
+TRACE_DIR = os.path.join(REPO, "tests", "data", "traces")
+N_CONFIGS = 2
+
+
+def run() -> list[dict]:
+    files = traceio.trace_files(TRACE_DIR)
+
+    def ingest():
+        return [traceio.load_trace(f) for f in files]
+
+    t_ingest = timeit(ingest, warmup=1, iters=5)
+    ingests = ingest()
+    trace_ws = [ing.workload for ing in ingests]
+    cfgs = default_grid(TINY, N_CONFIGS)
+    max_cycles = min(MAX_CYCLES, 1 << 15)
+    lanes = len(trace_ws) * N_CONFIGS
+
+    def grid(ws):
+        return jax.block_until_ready(
+            grid_sweep(ws, cfgs, max_cycles=max_cycles).state)
+
+    t_trace = timeit(lambda: grid(trace_ws), warmup=1, iters=3)
+    zoo_ws = [zoo_workload(n, scale=SIM_SCALE)
+              for n in zoo_names()[:len(trace_ws)]]
+    t_zoo = timeit(lambda: grid(zoo_ws), warmup=1, iters=3)
+
+    rows = [{
+        "name": f"traces/ingest_{len(files)}files",
+        "us_per_call": t_ingest * 1e6,
+        "derived": f"traces_per_s={len(files) / t_ingest:.1f}",
+    }, {
+        "name": f"traces/grid_trace_{len(trace_ws)}x{N_CONFIGS}",
+        "us_per_call": t_trace * 1e6,
+        "derived": f"lanes_per_s={lanes / t_trace:.2f}",
+    }, {
+        "name": f"traces/grid_zoo_{len(zoo_ws)}x{N_CONFIGS}",
+        "us_per_call": t_zoo * 1e6,
+        "derived": (f"lanes_per_s={lanes / t_zoo:.2f} "
+                    f"trace_vs_zoo={t_zoo / t_trace:.2f}x"),
+    }]
+    save_json("traces_bench", {
+        "files": [os.path.basename(f) for f in files],
+        "n_configs": N_CONFIGS, "max_cycles": max_cycles,
+        "t_ingest_s": t_ingest, "t_grid_trace_s": t_trace,
+        "t_grid_zoo_s": t_zoo,
+        "fit_err_max": max((f.fit_err_max for ing in ingests
+                            for f in ing.fits), default=0.0),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -28,6 +28,25 @@ import jax.numpy as jnp
 INSTR_FIELDS = ("ops", "dep", "addr_mode", "addr_param")
 
 
+def check_workload_fits(scfg, workload) -> None:
+    """Pre-trace guard: a kernel whose CTA needs more warp slots than an
+    SM has (``warps_per_cta > warps_per_sm``) can NEVER dispatch — the
+    engine's quantum loop would spin silently until ``max_cycles``.
+    Synthetic generators never produce such shapes, but real-trace
+    ingestion (sim/traceio.py) can: a 1024-thread CTA is 32 warps, more
+    than TINY's 8 slots.  Raise by name instead, and point at the
+    lowering knob that splits oversized CTAs."""
+    wps = scfg.warps_per_sm
+    for k in workload.kernels:
+        if k.warps_per_cta > wps:
+            raise ValueError(
+                f"kernel {k.name!r} of workload {workload.name!r} has "
+                f"warps_per_cta={k.warps_per_cta} > warps_per_sm={wps}: "
+                "it could never dispatch and would spin to max_cycles.  "
+                "Use a larger config, or split oversized CTAs at ingest "
+                "(traceio.load_trace(..., max_warps_per_cta=...))")
+
+
 def pad_packed(packed: dict, n_instr_max: int) -> dict:
     """Pad a packed kernel's instruction arrays to ``n_instr_max`` with
     inert NOP slots.  ``n_instr`` keeps the TRUE length, so the pad region

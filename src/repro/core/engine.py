@@ -169,9 +169,10 @@ def simulate(workload: Workload, cfg: GPUConfig, sm_runner,
     The whole workload — state init, per-kernel reset, every kernel's
     quantum loop — is one traced program (``lax.scan`` over the stacked
     kernel axis), jitted once."""
-    from repro.core.batch import stack_kernels
+    from repro.core.batch import check_workload_fits, stack_kernels
 
     scfg, dyn = split_config(cfg)
+    check_workload_fits(scfg, workload)
     stacked = stack_kernels([k.pack() for k in workload.kernels])
 
     def run(d):

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import stats as S
+from repro.core import batch
 from repro.core.batch import stack_workloads
 from repro.core.engine import run_workload, run_workload_stacked
 from repro.core.parallel import make_sm_runner
@@ -131,6 +132,7 @@ def sweep(workload: Workload, cfgs, mode: str = "vmap",
     the lanes are sharded over the 'cfg' axis and each lane's SM axis over
     'sm' — same stats, bit-exact, at any mesh shape."""
     scfg, dyn_batch = stack_dyn(cfgs)
+    batch.check_workload_fits(scfg, workload)
     packed = [k.pack() for k in workload.kernels]
     if mesh is not None:
         from repro.core import distribute
@@ -211,6 +213,8 @@ def grid_sweep(workloads, cfgs, mode: str = "vmap",
     are sharded over 'cfg', each lane's SM axis over 'sm'; the workload
     axis is replicated.  Stats are bit-exact at any mesh shape."""
     scfg, dyn_batch = stack_dyn(cfgs)
+    for w in workloads:
+        batch.check_workload_fits(scfg, w)
     stacked = stack_workloads(workloads)
     if mesh is not None:
         from repro.core import distribute

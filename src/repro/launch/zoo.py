@@ -4,8 +4,20 @@ whole benchmarks × configs grid as ONE compiled program.
   python -m repro.launch.zoo --list
   python -m repro.launch.zoo --run random_gather --scale 0.05
   python -m repro.launch.zoo --grid 4 4 --check     # W×C lanes vs solo
+  python -m repro.launch.zoo --trace tests/data/traces --check
+  python -m repro.launch.zoo --trace tests/data/traces --grid 3 4 --check
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       python -m repro.launch.zoo --grid 4 4 --mesh 2 2 --check
+
+``--trace FILE|DIR`` ingests real Accel-sim SASS trace subset files
+(sim/traceio.py) and registers them in the zoo as ``trace:<stem>``
+workloads.  With ``--grid W C`` the trace workloads fill the grid's
+workload rows first (synthetic zoo names top up if W exceeds the trace
+count) and ride the batched frontend unchanged; trace rows keep their
+real CTA counts (``--scale`` applies to synthetic generators only).
+Without ``--grid``/``--run`` an ingest summary is printed per trace, and
+``--check`` additionally runs an (all traces × 2 configs) grid verifying
+every lane bit-exact vs its solo run — the CI trace smoke.
 
 ``--grid W C`` takes the first W zoo workloads (registry order) and a
 C-point config grid (launch/dse.py:default_grid — L2 latency × scheduler)
@@ -39,7 +51,28 @@ from repro.core.engine import simulate
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import grid_sweep
 from repro.launch.dse import BASES, default_grid, sample_table_grid
-from repro.sim.workloads import zoo_names, zoo_workload
+from repro.sim.workloads import (TRACE_INGESTS, register_traces, zoo_names,
+                                 zoo_workload)
+
+
+def run_trace_summary(args, trace_names) -> None:
+    """Ingest-summary mode (``--trace`` without --grid/--run): report
+    fit stats per trace; with --check, verify an (all traces × 2 cfgs)
+    grid bit-exact against solo runs."""
+    for name in trace_names:
+        ing = TRACE_INGESTS[name]
+        s = ing.summary()
+        print(f"[zoo] ingested {name}: {s['n_kernels']} kernel(s), "
+              f"{s['total_ctas']} CTAs, n_instr={s['n_instr']}, "
+              f"fit_err mean={s['fit_err_mean']} max={s['fit_err_max']} "
+              f"blocks")
+    if args.check:
+        workloads = [zoo_workload(n) for n in trace_names]
+        cfgs = default_grid(BASES[args.base], 2)
+        grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles)
+        check_grid_vs_solo(grid, workloads, cfgs, args.max_cycles)
+        print(f"[zoo] check OK: {len(workloads)}x{len(cfgs)} trace grid "
+              "bit-exact vs solo runs")
 
 
 def lane_signature(stats: dict) -> dict:
@@ -49,13 +82,35 @@ def lane_signature(stats: dict) -> dict:
     return dict(S.comparable(stats), timeouts=stats["timeouts"])
 
 
-def run_grid(args) -> None:
+def check_grid_vs_solo(grid, workloads, cfgs, max_cycles: int) -> int:
+    """Re-run every (workload, config) pair solo and assert its grid
+    lane is bit-identical.  The ONE --check oracle for both grid modes.
+    Returns the verified lane count."""
+    runner = make_sm_runner(grid.scfg, "vmap")
+    for w, workload in enumerate(workloads):
+        for c, cfg in enumerate(cfgs):
+            solo = lane_signature(S.finalize(simulate(
+                workload, cfg, runner, max_cycles=max_cycles)))
+            lane = lane_signature(grid.stats[w][c])
+            assert lane == solo, (grid.names[w], c, lane, solo)
+    return len(workloads) * len(cfgs)
+
+
+def _scale_for(name: str, scale: float) -> float:
+    """Trace-derived workloads keep their real CTA counts; --scale
+    applies to the synthetic generators only."""
+    return 1.0 if name.startswith("trace:") else scale
+
+
+def run_grid(args, trace_names=()) -> None:
     n_w, n_c = args.grid
-    names = zoo_names()
+    names = list(trace_names) + [n for n in zoo_names()
+                                 if n not in trace_names]
     if n_w > len(names):
         raise SystemExit(f"--grid {n_w} exceeds zoo size {len(names)}")
     base = BASES[args.base]
-    workloads = [zoo_workload(n, scale=args.scale) for n in names[:n_w]]
+    workloads = [zoo_workload(n, scale=_scale_for(n, args.scale))
+                 for n in names[:n_w]]
     if args.sample_lat or args.sample_disp:
         cfgs = sample_table_grid(base, n_c, args.sample_lat,
                                  args.sample_disp)
@@ -79,19 +134,12 @@ def run_grid(args) -> None:
           f"({lanes / max(wall, 1e-9):.2f} lanes/s)")
 
     if args.check:
-        for w in range(n_w):
-            runner = make_sm_runner(grid.scfg, "vmap")
-            for c, cfg in enumerate(cfgs):
-                solo = lane_signature(S.finalize(simulate(
-                    workloads[w], cfg, runner,
-                    max_cycles=args.max_cycles)))
-                lane = lane_signature(grid.stats[w][c])
-                assert lane == solo, (grid.names[w], c, lane, solo)
-        print(f"[zoo] check OK: all {lanes} lanes bit-exact vs solo runs")
+        n = check_grid_vs_solo(grid, workloads, cfgs, args.max_cycles)
+        print(f"[zoo] check OK: all {n} lanes bit-exact vs solo runs")
 
 
 def run_one(args) -> None:
-    w = zoo_workload(args.run, scale=args.scale)
+    w = zoo_workload(args.run, scale=_scale_for(args.run, args.scale))
     cfg = BASES[args.base]
     t0 = time.time()
     st = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
@@ -122,6 +170,9 @@ def main(argv=None):
                     metavar=("CLASS", "LO", "HI"),
                     help="with --grid: config lanes step the per-class "
                          "dispatch interval of CLASS from LO to HI")
+    ap.add_argument("--trace", default="", metavar="FILE|DIR",
+                    help="ingest Accel-sim SASS trace subset file(s) and "
+                         "register them as trace:<stem> zoo workloads")
     ap.add_argument("--base", choices=sorted(BASES), default="tiny")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--max-cycles", type=int, default=1 << 15)
@@ -132,15 +183,21 @@ def main(argv=None):
     if (args.sample_lat or args.sample_disp) and not args.grid:
         raise SystemExit("--sample-lat/--sample-disp shape the config grid "
                          "and need --grid W C")
+    trace_names = []
+    if args.trace:
+        trace_names = register_traces(args.trace)
     if args.list:
         for n in zoo_names():
             print(n)
     elif args.grid:
-        run_grid(args)
+        run_grid(args, trace_names)
     elif args.run:
         run_one(args)
+    elif trace_names:
+        run_trace_summary(args, trace_names)
     else:
-        raise SystemExit("pick one of --list / --run NAME / --grid W C")
+        raise SystemExit("pick one of --list / --run NAME / --grid W C / "
+                         "--trace FILE|DIR")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ from repro.sim.config import FP32, INT32, LDG, SFU, STG, TENSOR  # noqa: F401
 A_NONE, A_STREAM, A_STRIDED, A_RANDOM = range(4)
 
 
-@dataclass
+@dataclass(eq=False)
 class KernelTrace:
     name: str
     n_ctas: int
@@ -31,6 +31,18 @@ class KernelTrace:
     @property
     def n_instr(self) -> int:
         return len(self.ops)
+
+    def __eq__(self, other) -> bool:
+        """Full IR equality, array fields elementwise — what the trace
+        round-trip conformance tests compare (dataclass default eq is
+        ambiguous on ndarrays)."""
+        if not isinstance(other, KernelTrace):
+            return NotImplemented
+        return (self.name == other.name
+                and self.n_ctas == other.n_ctas
+                and self.warps_per_cta == other.warps_per_cta
+                and all(np.array_equal(getattr(self, f), getattr(other, f))
+                        for f in ("ops", "dep", "addr_mode", "addr_param")))
 
     def pack(self) -> dict:
         return {

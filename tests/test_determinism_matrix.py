@@ -30,7 +30,12 @@ GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 # "zoo:" prefix loads from the sweep-facing workload zoo (sim/workloads.py)
 # so the batched frontend — padding, kernel-axis scan, zoo generators — is
 # locked cross-mode and cross-PR alongside the Table-2 analogues.
-CASES = (("hotspot", 0.02), ("myocyte", 1.0), ("zoo:mixed", 0.03))
+# "trace:" loads a bundled Accel-sim SASS trace fixture through the full
+# ingest pipeline (sim/traceio.py: parse → address fit → KernelTrace), so
+# real-trace-derived workloads are locked cross-mode and cross-PR too —
+# a parser/fitter change that shifts any lowered value fails here.
+CASES = (("hotspot", 0.02), ("myocyte", 1.0), ("zoo:mixed", 0.03),
+         ("trace:gather_chain", 1.0))
 MAX_CYCLES = 1 << 15
 
 
@@ -38,6 +43,10 @@ def load_case(bench, scale):
     if bench.startswith("zoo:"):
         from repro.sim.workloads import zoo_workload
         return zoo_workload(bench[len("zoo:"):], scale=scale)
+    if bench.startswith("trace:"):
+        # auto-registers from the bundled tests/data/traces fixtures
+        from repro.sim.workloads import zoo_workload
+        return zoo_workload(bench, scale=scale)
     return make_workload(bench, scale=scale)
 
 

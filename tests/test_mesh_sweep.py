@@ -63,6 +63,53 @@ def test_grid_sweep_mesh_shape_invariant():
         assert got == ref, f"mesh {shape} diverged from single-device run"
 
 
+TRACE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses, json
+    from repro.core import stats as S
+    from repro.core.distribute import make_mesh
+    from repro.core.sweep import grid_sweep
+    from repro.sim.config import TINY
+    from repro.sim.workloads import resolve_workload
+
+    MAX = 1 << 14
+    cfgs = [TINY,
+            dataclasses.replace(TINY, scheduler="lrr"),
+            dataclasses.replace(TINY, l2_lat=64, dram_row_penalty=48),
+            dataclasses.replace(TINY, l1_hit_lat=16, icnt_lat=24)]
+    # one real-trace workload (full ingest pipeline) next to a synthetic
+    # one: trace-derived lanes must survive 'cfg'/'sm' sharding too
+    ws = [resolve_workload("trace:gather_chain"),
+          resolve_workload("mixed", scale=0.02)]
+
+    def sig(st):
+        return dict(S.comparable(st), timeouts=st["timeouts"])
+
+    results = {}
+    for label, mesh in (("nomesh", None), ("2x2", make_mesh(2, 2))):
+        g = grid_sweep(ws, cfgs, mesh=mesh, max_cycles=MAX)
+        results[label] = [sig(g.stats[w][c])
+                          for w in range(len(ws)) for c in range(len(cfgs))]
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_trace_workload_grid_on_2x2_mesh():
+    """Real-trace ingestion × distribution: a grid holding a
+    trace-derived workload is bit-identical on a 2×2 ('cfg','sm') mesh
+    vs the single-device run."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", TRACE_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    ref = results.pop("nomesh")
+    assert any(s["cycles"] > 0 for s in ref)
+    assert results["2x2"] == ref
+
+
 class _StubMesh:
     """check_mesh only reads axis_names/shape, so shape validation is
     testable without forcing multi-device jax state."""

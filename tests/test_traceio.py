@@ -1,0 +1,416 @@
+"""Trace-ingestion conformance suite (sim/traceio.py).
+
+Locks the Accel-sim SASS trace subset parser → ``KernelTrace`` IR →
+simulator pipeline three ways:
+
+1. **Golden parses** of every bundled fixture (tests/data/traces/*):
+   opcode class sequences, dep chains, CTA/warp shapes and fitted
+   address knobs pinned as literals — a format or fitter change that
+   shifts any lowered value fails here first.
+2. **Malformed-input errors**: every rejected construct raises
+   ``TraceFormatError`` naming the offending line number.
+3. **Round-trip**: ``KernelTrace`` → synthesized subset text → parse →
+   lower → bit-equal IR, for the fixtures and real zoo workloads.
+
+Plus hypothesis property tests (random trace generator → invariants /
+round-trip) via the optional-hypothesis shim in tests/_hyp.py.
+"""
+import os
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.sim import traceio
+from repro.sim.config import (BAR, FP32, INT32, LDG, N_CLASSES, SFU, STG,
+                              TENSOR, TINY)
+from repro.sim.trace import (A_NONE, A_RANDOM, A_STREAM, A_STRIDED,
+                             KernelTrace, Workload)
+from repro.sim.traceio import (TraceFormatError, classify_opcode,
+                               lower_kernel, parse_trace_text)
+from repro.sim.workloads import (TRACE_INGESTS, register_traces,
+                                 zoo_workload)
+
+TRACE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "data", "traces")
+
+
+def load(name):
+    return traceio.load_trace(os.path.join(TRACE_DIR, name + ".trace"))
+
+
+# ---------------------------------------------------------------------------
+# 1. golden parses of the bundled fixtures
+# ---------------------------------------------------------------------------
+
+def test_vecadd_golden():
+    ing = load("vecadd")
+    assert len(ing.workload.kernels) == 1
+    k = ing.workload.kernels[0]
+    assert (k.name, k.n_ctas, k.warps_per_cta) == ("vecadd", 4, 2)
+    assert k.ops.tolist() == [LDG, LDG, FP32, STG]
+    assert k.dep.tolist() == [False, False, True, True]
+    assert k.addr_mode.tolist() == [A_STREAM, A_STREAM, A_NONE, A_STREAM]
+    assert k.addr_param.tolist() == [1, 5, 0, 9]
+    fit = ing.fits[0]
+    assert fit.n_mem == 3
+    assert fit.n_warps_seen == 8 and fit.divergent_warps == 0
+    assert fit.dropped == {"EXIT": 8}
+
+
+def test_mm_tile_golden():
+    ing = load("mm_tile")
+    k = ing.workload.kernels[0]
+    assert (k.name, k.n_ctas, k.warps_per_cta) == ("mm_tile", 6, 4)
+    assert k.ops.tolist() == [LDG, LDG, TENSOR, TENSOR,
+                              LDG, LDG, TENSOR, TENSOR, STG]
+    assert k.dep.tolist() == [False, False, True, True,
+                              False, False, True, True, False]
+    assert k.addr_mode.tolist() == [A_STRIDED, A_STRIDED, A_NONE, A_NONE,
+                                    A_STRIDED, A_STRIDED, A_NONE, A_NONE,
+                                    A_STREAM]
+    assert k.addr_param.tolist() == [2, 66, 0, 0, 2, 66, 0, 0, 100]
+    assert ing.fits[0].fit_err == [0.0] * 5      # exact on all 5 mem ops
+
+
+def test_gather_chain_golden():
+    """Multi-kernel file: kernels lower in file order; random-address
+    params recover exactly; the barrier kernel keeps its BAR op."""
+    ing = load("gather_chain")
+    gather, reduce_k = ing.workload.kernels
+    assert (gather.name, gather.n_ctas, gather.warps_per_cta) == \
+        ("gather", 4, 1)
+    assert gather.ops.tolist() == [LDG, INT32, LDG, INT32, STG]
+    assert gather.dep.tolist() == [False, True, True, True, False]
+    assert gather.addr_mode.tolist() == [A_RANDOM, A_NONE, A_RANDOM,
+                                         A_NONE, A_RANDOM]
+    assert gather.addr_param.tolist() == [3, 0, 7, 0, 11]
+    assert (reduce_k.name, reduce_k.n_ctas, reduce_k.warps_per_cta) == \
+        ("reduce", 2, 2)
+    assert reduce_k.ops.tolist() == [LDG, LDG, FP32, BAR, STG]
+    assert reduce_k.dep.tolist() == [False, False, True, False, False]
+    # reduce's first LDG is a mode-0 per-thread address LIST in the file;
+    # only the base is consumed, so the fit still recovers (stream, 0)
+    assert reduce_k.addr_mode.tolist() == [A_STREAM, A_STREAM, A_NONE,
+                                           A_NONE, A_STREAM]
+    assert reduce_k.addr_param.tolist() == [0, 1, 0, 0, 2]
+
+
+def test_fit_error_recorded():
+    """vecadd's second load is deliberately perturbed (+1 block on odd
+    gwarps) in the fixture: the fit stays A_STREAM with the true param
+    but records the error instead of silently pretending exactness."""
+    ing = load("vecadd")
+    fit = ing.fits[0]
+    assert fit.fit_err == [0.0, 0.5, 0.0]
+    assert fit.fit_err_mean == pytest.approx(1 / 6)
+    assert fit.fit_err_max == 0.5
+    s = ing.summary()
+    assert s["fit_err_max"] == 0.5 and s["n_kernels"] == 1
+
+
+def test_extra_headers_tolerated():
+    """Unrecognized '-key = value' headers are recorded and dropped, not
+    fatal (nvbit version, tracer version, base addrs...)."""
+    parsed = traceio.parse_trace_file(
+        os.path.join(TRACE_DIR, "vecadd.trace"))
+    assert len(parsed) == 1
+    pk = parsed[0]
+    assert pk.grid == (4, 1, 1) and pk.block == (64, 1, 1)
+    assert "nvbit version" in pk.extras
+    assert "accelsim tracer version" in pk.extras
+
+
+# ---------------------------------------------------------------------------
+# 2. malformed input → TraceFormatError naming the line
+# ---------------------------------------------------------------------------
+
+HDR = "-kernel name = k\n-grid dim = (2,1,1)\n-block dim = (32,1,1)\n"
+TB = "#BEGIN_TB\nthread block = 0,0,0\nwarp = 0\n"
+
+
+@pytest.mark.parametrize("text,match,line_no", [
+    (HDR.replace("(2,1,1)", "(2,1)"), "expected dimension tuple", 2),
+    ("0000 ffffffff 1 R2 FFMA 1 R1 0\n", "unexpected line", 1),
+    (HDR + TB + "zz00 ffffffff 1 R2 FFMA 1 R1 0\n#END_TB\n",
+     "expected hex PC", 7),
+    (HDR + TB + "0000 ffffffff 2 R2 FFMA 1 R1 0\n#END_TB\n",
+     "expected register operand", 7),
+    (HDR + TB + "insts = 3\n0000 ffffffff 1 R2 FFMA 1 R1 0\n#END_TB\n",
+     "declared insts = 3 but has 1", 9),
+    (HDR + TB + "0000 ffffffff 1 R2 LDG.E 1 R1 4 7 0x80 4\n#END_TB\n",
+     "unsupported address compression mode 7", 7),
+    (HDR + TB + "0000 ffffffff 1 R2 LDG.E 1 R1 4\n#END_TB\n",
+     "missing its address info", 7),
+    ("#BEGIN_TB\n", "kernel header incomplete", 1),
+    (HDR + "warp = 0\n", "outside #BEGIN_TB", 4),
+    (HDR + TB + "0000 ffffffff 1 R2 FFMA 1 R1 0 junk\n#END_TB\n",
+     "unexpected trailing tokens", 7),
+    (HDR + TB + "0000 ffffffff 1 R2 FFMA 1 R1 0\n",
+     "unterminated #BEGIN_TB", 7),
+    (HDR + "#BEGIN_TB\nthread block = 5,0,0\n",
+     "outside grid", 5),
+    (HDR.replace("(2,1,1)", "(1,1,1)") + TB
+     + "0000 ffffffff 1 R2 FFMA 1 R1 0\n#END_TB\n"
+     + TB + "0000 ffffffff 1 R2 FFMA 1 R1 0\n#END_TB\n",
+     "more thread blocks than grid size 1", 13),
+    ("", "no kernels found", None),
+])
+def test_malformed_input(text, match, line_no):
+    with pytest.raises(TraceFormatError, match=match) as exc:
+        parse_trace_text(text, path="bad.trace")
+    assert exc.value.line_no == line_no
+    if line_no is not None:
+        assert f"bad.trace:{line_no}" in str(exc.value)
+
+
+def test_error_message_names_path_and_line():
+    err = TraceFormatError("boom", line_no=7, path="x.trace")
+    assert str(err) == "x.trace:7: boom"
+    assert isinstance(err, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# 3. round-trip: IR → synthesized text → parse → equal IR
+# ---------------------------------------------------------------------------
+
+def _roundtrip(workload):
+    text = traceio.synthesize_trace(workload)
+    parsed = parse_trace_text(text, path="<synth>")
+    assert len(parsed) == len(workload.kernels)
+    for pk, orig in zip(parsed, workload.kernels):
+        kt, _fit = lower_kernel(pk)
+        assert kt == orig, orig.name
+
+
+def test_roundtrip_fixtures():
+    for name in ("mm_tile", "gather_chain"):
+        _roundtrip(load(name).workload)
+
+
+def test_roundtrip_zoo_workloads():
+    """Real zoo generators survive the full loop: their procedural
+    address knobs (stream/strided/random, params < 1024) are recovered
+    bit-exactly from the synthesized address streams."""
+    for name in ("gemm_tiled", "random_gather", "reduction_tree"):
+        _roundtrip(zoo_workload(name, scale=0.01))
+
+
+def test_random_param_recovered_exactly():
+    k = KernelTrace("r", 2, 2, np.array([LDG], np.int32),
+                    np.array([False]), np.array([A_RANDOM], np.int32),
+                    np.array([777], np.int32))
+    _roundtrip(Workload("r", [k]))
+
+
+# ---------------------------------------------------------------------------
+# classification / lowering details
+# ---------------------------------------------------------------------------
+
+def test_classify_opcode_table():
+    assert classify_opcode("LDG.E.SYS") == LDG
+    assert classify_opcode("STG.E") == STG
+    assert classify_opcode("ATOMG.ADD") == STG
+    assert classify_opcode("FFMA") == FP32
+    assert classify_opcode("HFMA2.MMA") == FP32
+    assert classify_opcode("IMAD.MOV.U32") == INT32
+    assert classify_opcode("MUFU.RCP") == SFU
+    assert classify_opcode("HMMA.1688.F32") == TENSOR
+    assert classify_opcode("BAR.SYNC") == BAR
+    assert classify_opcode("MEMBAR.GPU") == BAR
+    assert classify_opcode("EXIT") is None          # dropped
+    assert classify_opcode("BRA") == INT32          # control issues as ALU
+    assert classify_opcode("LDS.U") == INT32        # shmem: no DRAM traffic
+
+
+def test_shmem_and_unknown_ops_counted():
+    text = (HDR + TB
+            + "0000 ffffffff 1 R2 LDS.U 1 R1 4 1 0x100 4\n"
+            + "0010 ffffffff 1 R3 FROBNICATE 1 R2 0\n"
+            + "#END_TB\n")
+    pk = parse_trace_text(text)[0]
+    kt, fit = lower_kernel(pk)
+    assert kt.ops.tolist() == [INT32, INT32]
+    assert kt.dep.tolist() == [False, True]
+    assert fit.shmem_ops == 1 and fit.unknown_ops == 1
+    # shmem base addresses are NOT fitted: only LDG/STG classes hit DRAM
+    assert fit.n_mem == 0 and kt.addr_mode.tolist() == [A_NONE, A_NONE]
+
+
+def test_divergent_warp_excluded_from_fit():
+    text = (HDR
+            + "#BEGIN_TB\nthread block = 0,0,0\n"
+            + "warp = 0\n0000 ffffffff 1 R2 FFMA 1 R1 0\n"
+            + "#END_TB\n"
+            + "#BEGIN_TB\nthread block = 1,0,0\n"
+            + "warp = 0\n0000 ffffffff 1 R2 IMAD 1 R1 0\n"
+            + "#END_TB\n")
+    kt, fit = lower_kernel(parse_trace_text(text)[0])
+    assert kt.ops.tolist() == [FP32]     # canonical = thread block 0
+    assert fit.divergent_warps == 1 and fit.n_warps_seen == 2
+
+
+def test_dep_ignores_zero_register():
+    """R255 (RZ) always reads zero — writing then reading it is not a
+    dependency."""
+    text = (HDR + TB
+            + "0000 ffffffff 1 R255 FFMA 1 R1 0\n"
+            + "0010 ffffffff 1 R3 FFMA 1 R255 0\n"
+            + "#END_TB\n")
+    kt, _ = lower_kernel(parse_trace_text(text)[0])
+    assert kt.dep.tolist() == [False, False]
+
+
+def test_cta_split_for_oversized_blocks():
+    """A 1024-thread CTA (32 warps) splits into 4 CTAs of 8 warps under
+    max_warps_per_cta=8, preserving the total warp count."""
+    text = HDR.replace("(32,1,1)", "(1024,1,1)") + TB + \
+        "0000 ffffffff 1 R2 FFMA 1 R1 0\n#END_TB\n"
+    pk = parse_trace_text(text)[0]
+    kt, fit = lower_kernel(pk, max_warps_per_cta=8)
+    assert (kt.n_ctas, kt.warps_per_cta) == (8, 8)   # 2 CTAs × split 4
+    assert fit.cta_split == 4
+    kt2, _ = lower_kernel(pk)
+    assert (kt2.n_ctas, kt2.warps_per_cta) == (2, 32)
+
+
+def test_oversized_cta_rejected_before_simulation():
+    """core/batch.py:check_workload_fits: a kernel whose CTA exceeds the
+    SM's warp slots is rejected by name instead of spinning to
+    max_cycles."""
+    from repro.core.parallel import make_sm_runner
+    from repro.core.engine import simulate
+    from repro.core.sweep import grid_sweep
+
+    text = HDR.replace("(32,1,1)", "(1024,1,1)") + TB + \
+        "0000 ffffffff 1 R2 FFMA 1 R1 0\n#END_TB\n"
+    kt, _ = lower_kernel(parse_trace_text(text)[0])
+    w = Workload("trace:big", [kt])
+    with pytest.raises(ValueError, match="warps_per_cta=32 > warps_per_sm"):
+        simulate(w, TINY, make_sm_runner(TINY, "vmap"), max_cycles=1 << 10)
+    with pytest.raises(ValueError, match="max_warps_per_cta"):
+        grid_sweep([w], [TINY], max_cycles=1 << 10)
+
+
+# ---------------------------------------------------------------------------
+# zoo registration
+# ---------------------------------------------------------------------------
+
+def test_zoo_registration_and_scaling():
+    names = register_traces(TRACE_DIR)
+    assert names == ["trace:gather_chain", "trace:mm_tile", "trace:vecadd"]
+    assert set(names) <= set(TRACE_INGESTS)
+    w = zoo_workload("trace:vecadd")               # real grid by default
+    assert w.name == "trace:vecadd"
+    assert [k.n_ctas for k in w.kernels] == [4]
+    half = zoo_workload("trace:vecadd", scale=0.5)
+    assert [k.n_ctas for k in half.kernels] == [2]
+    with pytest.raises(FileNotFoundError, match="no .trace files"):
+        register_traces(os.path.dirname(TRACE_DIR))   # dir without traces
+
+
+def test_zoo_trace_autoregister_and_unknown():
+    """'trace:<x>' resolves from the search path without explicit
+    registration; unknown names still raise the zoo KeyError."""
+    from repro.sim import workloads as Z
+
+    Z.ZOO.pop("trace:mm_tile", None)
+    Z.TRACE_INGESTS.pop("trace:mm_tile", None)
+    w = zoo_workload("trace:mm_tile")              # bundled fixture dir
+    assert w.kernels[0].name == "mm_tile"
+    with pytest.raises(KeyError, match="unknown zoo workload"):
+        zoo_workload("trace:no_such_fixture")
+
+
+def test_resolve_workload_namespaces():
+    from repro.sim.workloads import resolve_workload
+
+    assert resolve_workload("trace:vecadd").name == "trace:vecadd"
+    assert resolve_workload("zoo:mixed", 0.02).name == "mixed"
+    assert resolve_workload("gemm_tiled", 0.02).name == "gemm_tiled"
+    assert resolve_workload("hotspot", 0.02).name == "hotspot"
+
+
+# ---------------------------------------------------------------------------
+# CLI (launch/trace_ingest.py)
+# ---------------------------------------------------------------------------
+
+def test_trace_ingest_cli(tmp_path, capsys):
+    import json
+
+    from repro.launch.trace_ingest import main
+
+    vec = os.path.join(TRACE_DIR, "vecadd.trace")
+    assert main(["inspect", vec]) == 0
+    out = capsys.readouterr().out
+    assert "kernel 'vecadd'" in out and "classes" in out
+
+    assert main(["summarize", vec]) == 0
+    s = json.loads(capsys.readouterr().out)
+    assert s["n_kernels"] == 1 and s["fit_err_max"] == 0.5
+
+    dst = str(tmp_path / "vecadd.json")
+    assert main(["convert", vec, "-o", dst]) == 0
+    capsys.readouterr()
+    with open(dst) as f:
+        ir = json.load(f)
+    assert ir["kernels"][0]["ops"] == [LDG, LDG, FP32, STG]
+
+    assert main(["roundtrip", vec]) == 0
+    assert "roundtrip OK" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# property tests: random trace generator → parse → lowered invariants
+# ---------------------------------------------------------------------------
+
+def _instr_strategy():
+    mem = st.tuples(st.sampled_from([LDG, STG]), st.booleans(),
+                    st.sampled_from([A_STREAM, A_STRIDED, A_RANDOM]),
+                    st.integers(min_value=0, max_value=1023))
+    alu = st.tuples(st.sampled_from([FP32, INT32, SFU, TENSOR, BAR]),
+                    st.booleans(), st.just(A_NONE), st.just(0))
+    return st.one_of(mem, alu)
+
+
+def _kernel_strategy():
+    return st.builds(
+        lambda body, n_ctas, wpc: KernelTrace(
+            "prop", n_ctas, wpc,
+            np.array([b[0] for b in body], np.int32),
+            np.array([False] + [b[1] for b in body[1:]], bool),
+            np.array([b[2] for b in body], np.int32),
+            np.array([b[3] for b in body], np.int32)),
+        st.lists(_instr_strategy(), min_size=1, max_size=8),
+        st.integers(min_value=1, max_value=3),
+        st.integers(min_value=1, max_value=4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_kernel_strategy())
+def test_prop_lowered_invariants(kernel):
+    """Any generated trace parses back to a KernelTrace whose fields
+    satisfy the IR invariants the engine relies on."""
+    text = traceio.synthesize_kernel(kernel)
+    kt, fit = lower_kernel(parse_trace_text(text)[0])
+    assert kt.n_instr == len(kt.ops) == len(kt.dep) \
+        == len(kt.addr_mode) == len(kt.addr_param)
+    assert kt.n_instr == kernel.n_instr
+    assert not kt.dep[0]
+    assert (kt.ops >= 0).all() and (kt.ops < N_CLASSES).all()
+    assert (kt.addr_param >= 0).all()
+    assert (kt.addr_mode >= 0).all() and (kt.addr_mode <= A_RANDOM).all()
+    assert kt.n_ctas >= 1 and kt.warps_per_cta >= 1
+    assert fit.n_mem == int(np.isin(kt.ops, (LDG, STG)).sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(_kernel_strategy())
+def test_prop_roundtrip(kernel):
+    """Generated traces with ≥2 gwarps round-trip to the identical IR
+    (single-gwarp linear fits are inherently ambiguous — documented)."""
+    if kernel.n_ctas * kernel.warps_per_cta < 2:
+        kernel = KernelTrace(kernel.name, 2, kernel.warps_per_cta,
+                             kernel.ops, kernel.dep, kernel.addr_mode,
+                             kernel.addr_param)
+    _roundtrip(Workload("prop", [kernel]))

@@ -80,3 +80,41 @@ def test_zoo_registry_complete():
 def test_zoo_unknown_name():
     with pytest.raises(KeyError, match="unknown zoo workload"):
         zoo_workload("nope")
+
+
+# ---------------------------------------------------------------------------
+# mixed trace + synthetic grid (real-trace ingestion, sim/traceio.py)
+# ---------------------------------------------------------------------------
+
+MIXED_CFGS = GRID_CFGS[:2]
+
+
+@pytest.fixture(scope="module")
+def mixed_grid():
+    """2 trace-derived + 2 synthetic workloads in ONE stacked grid.  The
+    trace kernels differ from the zoo's in kernel count, length, CTA
+    count and warps_per_cta, so both padding axes are exercised with
+    real-trace rows in the batch."""
+    from repro.sim.workloads import resolve_workload
+
+    names = ("trace:vecadd", "trace:gather_chain", "random_gather",
+             "stencil")
+    ws = [resolve_workload(n, scale=1.0 if n.startswith("trace:") else SCALE)
+          for n in names]
+    return ws, grid_sweep(ws, MIXED_CFGS, max_cycles=MAX_CYCLES)
+
+
+@pytest.mark.parametrize("w", range(4))
+@pytest.mark.parametrize("c", range(len(MIXED_CFGS)))
+def test_mixed_trace_grid_lane_equals_solo(mixed_grid, w, c):
+    ws, result = mixed_grid
+    cfg = MIXED_CFGS[c]
+    solo = signature(S.finalize(simulate(
+        ws[w], cfg, make_sm_runner(cfg, "vmap"), max_cycles=MAX_CYCLES)))
+    assert signature(result.stats[w][c]) == solo
+
+
+def test_mixed_trace_grid_rows_distinct(mixed_grid):
+    _, result = mixed_grid
+    rows = [S.comparable(result.stats[w][0]) for w in range(4)]
+    assert len({tuple(sorted(r.items())) for r in rows}) == len(rows)
