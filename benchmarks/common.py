@@ -60,9 +60,15 @@ def git_sha() -> str:
 
 def save_bench(suite: str, rows: list) -> str:
     """Standardized perf-trajectory artifact: BENCH_<suite>.json with the
-    suite's rows plus the git sha and UTC date, so CI-uploaded artifacts
-    are comparable across commits.  Returns the file path."""
+    suite's rows plus the git sha, UTC date and HOST CONTEXT (hostname,
+    device kind/count, XLA_FLAGS — core/telemetry.py:host_context), so
+    CI-uploaded artifacts are comparable across commits and labeled across
+    machines.  Also drops a ``bench_<suite>`` run manifest under
+    experiments/runs/ so `launch/report.py list|summarize` sees bench runs
+    next to launcher runs.  Returns the BENCH file path."""
     import datetime
+
+    from repro.core.telemetry import host_context, write_manifest
 
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"BENCH_{suite}.json")
@@ -72,9 +78,12 @@ def save_bench(suite: str, rows: list) -> str:
                   "derived": r["derived"]} for r in rows],
         "git_sha": git_sha(),
         "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "host": host_context(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
+    write_manifest(f"bench_{suite}",
+                   extra={"suite": suite, "rows": payload["rows"]})
     return path
 
 

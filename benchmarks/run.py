@@ -29,6 +29,46 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
+def perf_gate() -> list:
+    """Perf-trajectory gate (ROADMAP open item): compare the batched-grid
+    vs solo-loop speedup measured THIS run (experiments/bench/
+    grid_sweep.json — both paths timed on the same host in the same
+    process, so machine speed cancels out) against the committed reference
+    (benchmarks/perf_reference.json).  Returns a list of failure strings;
+    empty = gate passed."""
+    import json
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    ref_path = os.path.join(here, "perf_reference.json")
+    cur_path = os.path.join(here, "..", "experiments", "bench",
+                            "grid_sweep.json")
+    with open(ref_path) as f:
+        ref = json.load(f)
+    try:
+        with open(cur_path) as f:
+            cur = json.load(f)
+    except FileNotFoundError:
+        return [f"--gate needs the grid suite's {cur_path} "
+                "(run with --only grid or no --only)"]
+    fails = []
+    for key, spec in ref.items():
+        if key != "grid":
+            continue
+        tol = float(spec.get("tolerance", 0.25))
+        floor = float(spec["speedup"]) * (1.0 - tol)
+        got = float(cur["speedup"])
+        verdict = "OK" if got >= floor else "REGRESSION"
+        print(f"[gate] grid batched-vs-loop speedup: {got:.3f}x "
+              f"(reference {spec['speedup']}x, floor {floor:.3f}x "
+              f"at -{tol:.0%}) {verdict}")
+        if got < floor:
+            fails.append(
+                f"grid speedup {got:.3f}x < floor {floor:.3f}x — the "
+                "batched grid regressed vs the solo loop; if intentional, "
+                "update benchmarks/perf_reference.json")
+    return fails
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
@@ -36,7 +76,13 @@ def main() -> None:
                          "tables traces roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail (exit 1) when this run's batched-grid "
+                         "speedup regresses >tolerance vs "
+                         "benchmarks/perf_reference.json")
     args = ap.parse_args()
+    if args.gate and args.only is not None and "grid" not in args.only:
+        args.only = list(args.only) + ["grid"]   # the gate needs its data
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
@@ -75,6 +121,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.gate:
+        for msg in perf_gate():
+            print(f"[gate] FAIL: {msg}")
+            failed = True
     if failed:
         sys.exit(1)
 

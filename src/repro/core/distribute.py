@@ -37,6 +37,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import telemetry
 from repro.core.engine import run_workload_stacked
 from repro.core.parallel import make_shard_body
 from repro.sim.config import StaticConfig, static_part
@@ -68,12 +69,15 @@ def make_mesh(n_cfg: int, n_sm: int = 1) -> Mesh:
                 (CFG_AXIS, SM_AXIS))
 
 
-def state_specs(*prefix) -> dict:
+def state_specs(*prefix, telem: bool = False) -> dict:
     """PartitionSpec pytree-prefix for a state dict whose leaves carry
     ``prefix`` leading lane axes: per-SM parts additionally shard their SM
-    axis over 'sm'; mem/ctrl/stats are replicated within an 'sm' group."""
+    axis over 'sm'; mem/ctrl/stats are replicated within an 'sm' group.
+    ``telem`` adds the replicated counter-timeline part present when the
+    StaticConfig enables telemetry (core/telemetry.py)."""
+    parts = STATE_PARTS + (("telem",) if telem else ())
     return {k: (P(*prefix, SM_AXIS) if k in SHARDED_PARTS else P(*prefix))
-            for k in STATE_PARTS}
+            for k in parts}
 
 
 def check_mesh(mesh: Mesh, scfg: StaticConfig, n_lanes: int) -> None:
@@ -123,6 +127,7 @@ def make_dist_kernel_runner(scfg: StaticConfig, n_sm_dev: int,
     analogue of ``engine.run_kernel``, pluggable into
     ``run_workload_stacked(kernel_runner=...)``."""
     body = make_shard_body(scfg, n_sm_dev, exchange)
+    telem_on = telemetry.enabled(scfg)
 
     def kernel_runner(st, packed, dyn):
         def cond(s):
@@ -133,10 +138,21 @@ def make_dist_kernel_runner(scfg: StaticConfig, n_sm_dev: int,
             warp, sm, req, stats_sm, mem, ctrl, gstats = body(
                 s["warp"], s["sm"], s["req"], s["stats_sm"],
                 s["mem"], s["ctrl"], s["stats"], packed, dyn)
-            return {"warp": warp, "sm": sm, "req": req, "mem": mem,
-                    "ctrl": ctrl, "stats_sm": stats_sm, "stats": gstats}
+            out = {"warp": warp, "sm": sm, "req": req, "mem": mem,
+                   "ctrl": ctrl, "stats_sm": stats_sm, "stats": gstats}
+            if telem_on:
+                # per-SM arrays here are this device's shard — the counter
+                # sums psum over 'sm' so the replicated buffer row holds
+                # full-machine totals, bit-identical on every device
+                out["telem"] = telemetry.quantum_update(
+                    s["telem"], out, packed, scfg, axis_name=SM_AXIS)
+            return out
 
-        return jax.lax.while_loop(cond, step, st)
+        st = jax.lax.while_loop(cond, step, st)
+        if telem_on:
+            st = dict(st, telem=telemetry.sample(
+                st["telem"], st, scfg, axis_name=SM_AXIS, force=True))
+        return st
 
     return kernel_runner
 
@@ -178,7 +194,9 @@ def make_dist_sweep_runner(scfg: StaticConfig, mesh: Mesh,
         return jax.vmap(run_lane, in_axes=(None, 0))(stacked, dyn_batch)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P(), P(CFG_AXIS)),
-                   out_specs=state_specs(CFG_AXIS), check_rep=False)
+                   out_specs=state_specs(
+                       CFG_AXIS, telem=telemetry.enabled(scfg)),
+                   check_rep=False)
     return jax.jit(fn)
 
 
@@ -201,5 +219,7 @@ def make_dist_grid_runner(scfg: StaticConfig, mesh: Mesh,
         return jax.vmap(over_cfgs, in_axes=(0, None))(stacked, dyn_batch)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P(), P(CFG_AXIS)),
-                   out_specs=state_specs(None, CFG_AXIS), check_rep=False)
+                   out_specs=state_specs(
+                       None, CFG_AXIS, telem=telemetry.enabled(scfg)),
+                   check_rep=False)
     return jax.jit(fn)

@@ -28,6 +28,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.sim.config import DynConfig, GPUConfig, StaticConfig, split_config
 from repro.sim.cta import cta_issue
 from repro.sim.memsys import mem_phase
@@ -54,8 +55,14 @@ def quantum_step(state: dict, trace: dict, cfg: StaticConfig,
     done_cycle = jnp.where((ctrl["done_cycle"] < 0) & done, cycle_end,
                            ctrl["done_cycle"])
     ctrl = dict(ctrl, cycle=cycle_end, done_cycle=done_cycle)
-    return {"warp": warp, "sm": sm, "req": req, "mem": mem, "ctrl": ctrl,
-            "stats_sm": stats_sm, "stats": gstats}
+    out = {"warp": warp, "sm": sm, "req": req, "mem": mem, "ctrl": ctrl,
+           "stats_sm": stats_sm, "stats": gstats}
+    # opt-in counter timeline: statically gated, so the compiled program
+    # is unchanged when telemetry is off (core/telemetry.py)
+    if telemetry.enabled(cfg):
+        out["telem"] = telemetry.quantum_update(state["telem"], out,
+                                                trace, cfg)
+    return out
 
 
 def run_kernel(state: dict, trace: dict, cfg: StaticConfig,
@@ -67,7 +74,13 @@ def run_kernel(state: dict, trace: dict, cfg: StaticConfig,
     def body(st):
         return quantum_step(st, trace, cfg, dyn, sm_runner)
 
-    return jax.lax.while_loop(cond, body, state)
+    state = jax.lax.while_loop(cond, body, state)
+    # force a final snapshot per kernel so the last written timeline row
+    # always equals the final cumulative counters (core/telemetry.py)
+    if telemetry.enabled(cfg):
+        state = dict(state, telem=telemetry.sample(
+            state["telem"], state, cfg, force=True))
+    return state
 
 
 def kernel_cycles(ctrl: dict):

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import telemetry
 from repro.sim.config import GPUConfig, split_config, static_part
 from repro.sim.cta import cta_issue
 from repro.sim.memsys import mem_phase
@@ -233,8 +234,14 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
         warp, sm, req, stats_sm, mem, ctrl, gstats = fn(
             state["warp"], state["sm"], state["req"], state["stats_sm"],
             state["mem"], state["ctrl"], state["stats"], trace, dyn)
-        return {"warp": warp, "sm": sm, "req": req, "mem": mem,
-                "ctrl": ctrl, "stats_sm": stats_sm, "stats": gstats}
+        out = {"warp": warp, "sm": sm, "req": req, "mem": mem,
+               "ctrl": ctrl, "stats_sm": stats_sm, "stats": gstats}
+        # telemetry runs OUTSIDE the shard region, where the out_specs
+        # have reassembled the full per-SM arrays — no collectives needed
+        if "telem" in state:
+            out["telem"] = telemetry.quantum_update(
+                state["telem"], out, trace, static_part(cfg))
+        return out
 
     return sharded_step
 
@@ -253,7 +260,11 @@ def run_kernel_sharded(state, trace, cfg: GPUConfig, mesh: Mesh,
     def body(st):
         return step(st, trace, dyn)
 
-    return jax.lax.while_loop(cond, body, state)
+    state = jax.lax.while_loop(cond, body, state)
+    if "telem" in state:
+        state = dict(state, telem=telemetry.sample(
+            state["telem"], state, static_part(cfg), force=True))
+    return state
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,40 @@ def finalize(state: dict) -> dict:
         np.asarray(state["sm"]["addrset_over"])))
     ipc = out["issued"] / max(out["cycles"], 1)
     out["ipc"] = round(ipc, 4)
+    # opt-in telemetry (core/telemetry.py): cumulative lockstep-waste and
+    # the number of timeline samples taken.  Harness metadata like the
+    # timeout counters — NOT part of comparable(), so telemetry-on runs
+    # stay bit-identical to telemetry-off runs on the comparable subset.
+    if "telem" in state:
+        out["lockstep_waste"] = int(np.asarray(state["telem"]["waste"]))
+        out["telemetry_samples"] = int(np.asarray(state["telem"]["idx"]))
     return out
+
+
+def to_jsonable(obj):
+    """Recursively convert a stats/manifest payload to JSON-safe builtins:
+    numpy arrays → lists, numpy/jax scalars → int/float, tuples → lists.
+    ``finalize`` output carries ``*_per_sm`` int64 arrays that
+    ``json.dump`` rejects — every manifest/bench writer funnels through
+    here instead of crashing or silently str()-ing them."""
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(v) for v in obj]
+    if isinstance(obj, (bool, np.bool_)):
+        return bool(obj)
+    if isinstance(obj, (int, np.integer)):
+        return int(obj)
+    if isinstance(obj, (float, np.floating)):
+        return float(obj)
+    if obj is None or isinstance(obj, str):
+        return obj
+    if hasattr(obj, "__array__"):          # numpy / jax arrays
+        arr = np.asarray(obj)
+        if arr.ndim == 0:
+            return arr.item()
+        return arr.tolist()
+    return str(obj)                        # last resort: stable repr
 
 
 def comparable(stats: dict) -> dict:

@@ -37,6 +37,7 @@ Usage:
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -107,12 +108,37 @@ def take_lane(batched_state: dict, i: int) -> dict:
     return jax.tree_util.tree_map(lambda x: x[i], batched_state)
 
 
+def timed_call(runner, *args, n_lanes: int = 1) -> tuple:
+    """Run a jitted program with the wall-clock split the run manifests
+    record: AOT-lower + compile timed separately from execution, plus
+    lanes/sec of the executed program.  Falls back to a plain (fused)
+    call if AOT lowering is unavailable for the runner; the manifest then
+    reports compile_s=None and the execute time includes compilation.
+    Returns (result, timings)."""
+    timings = {"n_lanes": n_lanes}
+    try:
+        t0 = time.perf_counter()
+        compiled = runner.lower(*args).compile()
+        timings["compile_s"] = round(time.perf_counter() - t0, 4)
+        fn = compiled
+    except (AttributeError, TypeError, NotImplementedError):
+        timings["compile_s"] = None
+        fn = runner
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args))
+    timings["execute_s"] = round(time.perf_counter() - t0, 4)
+    timings["lanes_per_s"] = round(
+        n_lanes / max(timings["execute_s"], 1e-9), 2)
+    return out, timings
+
+
 @dataclass
 class SweepResult:
     scfg: StaticConfig
     state: dict                       # batched final state (leading lane axis)
     n: int
     stats: list = field(default_factory=list)   # per-lane finalized dicts
+    timings: dict = field(default_factory=dict)  # compile/execute split
 
     @property
     def cycles(self):
@@ -121,6 +147,15 @@ class SweepResult:
     def table(self, keys=("cycles", "ipc", "l1_miss", "l2_miss",
                           "dram_req")) -> list:
         return [{k: s[k] for k in keys} for s in self.stats]
+
+    def timelines(self) -> dict:
+        """{lane_index_str: (n_used, N_COUNTERS) sample rows} for every
+        lane, when the StaticConfig enabled telemetry."""
+        from repro.core import telemetry
+        if not telemetry.enabled(self.scfg):
+            return {}
+        return {str(i): telemetry.timeline(take_lane(self.state, i))
+                for i in range(self.n)}
 
 
 def sweep(workload: Workload, cfgs, mode: str = "vmap",
@@ -147,14 +182,15 @@ def sweep(workload: Workload, cfgs, mode: str = "vmap",
         dyn_batch = distribute.place_lanes(dyn_batch, mesh)
         runner = distribute.make_dist_sweep_runner(scfg, mesh, max_cycles,
                                                    exchange)
-        bstate = jax.block_until_ready(
-            runner(stack_kernels(packed), dyn_batch))
+        bstate, timings = timed_call(runner, stack_kernels(packed),
+                                     dyn_batch, n_lanes=len(cfgs))
     else:
         runner = make_sweep_runner(scfg, packed, mode, max_cycles)
-        bstate = jax.block_until_ready(runner(dyn_batch))
+        bstate, timings = timed_call(runner, dyn_batch, n_lanes=len(cfgs))
     n = len(cfgs)
     stats = [S.finalize(take_lane(bstate, i)) for i in range(n)]
-    return SweepResult(scfg=scfg, state=bstate, n=n, stats=stats)
+    return SweepResult(scfg=scfg, state=bstate, n=n, stats=stats,
+                       timings=timings)
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +227,7 @@ class GridResult:
     n_workloads: int
     n_cfgs: int
     stats: list = field(default_factory=list)   # stats[w][c] finalized dict
+    timings: dict = field(default_factory=dict)  # compile/execute split
 
     def table(self, keys=("cycles", "ipc", "l1_miss", "l2_miss",
                           "dram_req")) -> list:
@@ -198,6 +235,17 @@ class GridResult:
                  **{k: self.stats[w][c][k] for k in keys}}
                 for w in range(self.n_workloads)
                 for c in range(self.n_cfgs)]
+
+    def timelines(self) -> dict:
+        """{"<workload>/<cfg>": (n_used, N_COUNTERS) sample rows} per grid
+        lane, when the StaticConfig enabled telemetry."""
+        from repro.core import telemetry
+        if not telemetry.enabled(self.scfg):
+            return {}
+        return {f"{self.names[w]}/{c}": telemetry.timeline(
+                    take_grid_lane(self.state, w, c))
+                for w in range(self.n_workloads)
+                for c in range(self.n_cfgs)}
 
 
 def grid_sweep(workloads, cfgs, mode: str = "vmap",
@@ -232,10 +280,12 @@ def grid_sweep(workloads, cfgs, mode: str = "vmap",
                                                   exchange)
     else:
         runner = make_grid_runner(scfg, mode, max_cycles)
-    bstate = jax.block_until_ready(runner(stacked, dyn_batch))
     nw, nc = len(workloads), len(cfgs)
+    bstate, timings = timed_call(runner, stacked, dyn_batch,
+                                 n_lanes=nw * nc)
     stats = [[S.finalize(take_grid_lane(bstate, w, c)) for c in range(nc)]
              for w in range(nw)]
     return GridResult(scfg=scfg, state=bstate,
                       names=[w.name for w in workloads],
-                      n_workloads=nw, n_cfgs=nc, stats=stats)
+                      n_workloads=nw, n_cfgs=nc, stats=stats,
+                      timings=timings)

@@ -29,6 +29,7 @@ whole sweep a single ``jit(vmap(engine))`` call (core/sweep.py).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import time
@@ -36,6 +37,7 @@ import time
 import jax
 
 from repro.core import stats as S
+from repro.core import telemetry as T
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import sweep
@@ -89,6 +91,42 @@ def sample_table_grid(base: GPUConfig, n: int, sample_lat=(),
     return out
 
 
+def add_observability_args(ap: argparse.ArgumentParser) -> None:
+    """The shared observability flags (this launcher + launch/zoo.py):
+    in-trace counter-timeline telemetry, XLA profiler capture, and the
+    run-manifest opt-out."""
+    ap.add_argument("--telemetry", type=int, default=0, metavar="S",
+                    help="sample the per-SM counter timeline into S "
+                         "preallocated rows per lane (core/telemetry.py); "
+                         "0 = off (compiled program unchanged)")
+    ap.add_argument("--telemetry-every", type=int, default=1, metavar="N",
+                    help="sampling cadence in quanta (default 1)")
+    ap.add_argument("--profile", default="", metavar="DIR",
+                    help="capture a jax.profiler (XLA-level) trace of the "
+                         "run into DIR, alongside the manifest")
+    ap.add_argument("--no-manifest", action="store_true",
+                    help="skip writing the run manifest JSON under "
+                         "experiments/runs/")
+
+
+def apply_telemetry(cfgs: list, args) -> list:
+    """Enable the counter-timeline knobs on every lane (all lanes must
+    share one StaticConfig, so telemetry is all-lanes-or-none)."""
+    if args.telemetry <= 0:
+        return cfgs
+    return [dataclasses.replace(c, telemetry_samples=args.telemetry,
+                                telemetry_every=args.telemetry_every)
+            for c in cfgs]
+
+
+def profile_ctx(args):
+    """jax.profiler trace capture context for --profile DIR (nullcontext
+    when off)."""
+    if not getattr(args, "profile", ""):
+        return contextlib.nullcontext()
+    return jax.profiler.trace(args.profile)
+
+
 def describe(cfg: GPUConfig) -> dict:
     d = {k: getattr(cfg, k) for k in DYNAMIC_FIELDS}
     d["scheduler"] = cfg.scheduler
@@ -124,6 +162,7 @@ def main(argv=None):
                          "A cfg-devices × B sm-devices")
     ap.add_argument("--check", action="store_true",
                     help="verify every lane against a solo engine run")
+    add_observability_args(ap)
     args = ap.parse_args(argv)
 
     base = BASES[args.base]
@@ -146,9 +185,11 @@ def main(argv=None):
         from repro.core.distribute import make_mesh
         mesh = make_mesh(*args.mesh)
 
+    cfgs = apply_telemetry(cfgs, args)
     w = make_workload(args.workload, scale=args.scale)
     t0 = time.time()
-    result = sweep(w, cfgs, max_cycles=args.max_cycles, mesh=mesh)
+    with profile_ctx(args):
+        result = sweep(w, cfgs, max_cycles=args.max_cycles, mesh=mesh)
     wall = time.time() - t0
 
     rows = []
@@ -159,9 +200,23 @@ def main(argv=None):
     print(json.dumps(rows, indent=1))
     where = (f"{args.mesh[0]}x{args.mesh[1]} ('cfg','sm') mesh"
              if args.mesh else "one device")
+    tm = result.timings
     print(f"[dse] {len(cfgs)} configs × {w.name}: one compiled call on "
           f"{where}, wall={wall:.1f}s "
-          f"({len(cfgs) / max(wall, 1e-9):.2f} configs/s)")
+          f"(compile={tm.get('compile_s')}s execute={tm.get('execute_s')}s "
+          f"{tm.get('lanes_per_s')} lanes/s)")
+
+    if not args.no_manifest:
+        tls = result.timelines()
+        mpath = T.write_manifest(
+            "dse", scfg=result.scfg, mesh_shape=args.mesh,
+            timings=dict(tm, wall_s=round(wall, 4)),
+            stats=result.stats,
+            timelines={k: v.tolist() for k, v in tls.items()} or None,
+            lanes=[describe(c) for c in cfgs],
+            extra={"workload": w.name,
+                   "profile_dir": args.profile or None})
+        print(f"[dse] manifest: {mpath}")
 
     if args.check:
         # one compiled UNBATCHED program checks every lane: dyn is a traced

@@ -47,10 +47,13 @@ import json
 import time
 
 from repro.core import stats as S
+from repro.core import telemetry as T
 from repro.core.engine import simulate
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import grid_sweep
-from repro.launch.dse import BASES, default_grid, sample_table_grid
+from repro.launch.dse import (BASES, add_observability_args, apply_telemetry,
+                              default_grid, describe, profile_ctx,
+                              sample_table_grid)
 from repro.sim.workloads import (TRACE_INGESTS, register_traces, zoo_names,
                                  zoo_workload)
 
@@ -116,6 +119,7 @@ def run_grid(args, trace_names=()) -> None:
                                  args.sample_disp)
     else:
         cfgs = default_grid(base, n_c)
+    cfgs = apply_telemetry(cfgs, args)
 
     mesh = None
     if args.mesh:
@@ -123,15 +127,33 @@ def run_grid(args, trace_names=()) -> None:
         mesh = make_mesh(*args.mesh)
 
     t0 = time.time()
-    grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles, mesh=mesh)
+    with profile_ctx(args):
+        grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles,
+                          mesh=mesh)
     wall = time.time() - t0
     print(json.dumps(grid.table(), indent=1))
     lanes = n_w * n_c
     where = (f"{args.mesh[0]}x{args.mesh[1]} ('cfg','sm') mesh"
              if args.mesh else "one device")
+    tm = grid.timings
     print(f"[zoo] grid {n_w} workloads × {n_c} configs = {lanes} lanes: "
           f"one compiled call on {where}, wall={wall:.1f}s "
-          f"({lanes / max(wall, 1e-9):.2f} lanes/s)")
+          f"(compile={tm.get('compile_s')}s execute={tm.get('execute_s')}s "
+          f"{tm.get('lanes_per_s')} lanes/s)")
+
+    if not args.no_manifest:
+        tls = grid.timelines()
+        mpath = T.write_manifest(
+            "zoo_grid", scfg=grid.scfg, mesh_shape=args.mesh,
+            timings=dict(tm, wall_s=round(wall, 4)),
+            stats=[dict(grid.stats[w][c], workload=grid.names[w], cfg=c)
+                   for w in range(n_w) for c in range(n_c)],
+            timelines={k: v.tolist() for k, v in tls.items()} or None,
+            lanes=[dict(describe(cfg), workload=grid.names[w], cfg=c)
+                   for w in range(n_w) for c, cfg in enumerate(cfgs)],
+            extra={"workloads": grid.names,
+                   "profile_dir": args.profile or None})
+        print(f"[zoo] manifest: {mpath}")
 
     if args.check:
         n = check_grid_vs_solo(grid, workloads, cfgs, args.max_cycles)
@@ -140,16 +162,32 @@ def run_grid(args, trace_names=()) -> None:
 
 def run_one(args) -> None:
     w = zoo_workload(args.run, scale=_scale_for(args.run, args.scale))
-    cfg = BASES[args.base]
+    [cfg] = apply_telemetry([BASES[args.base]], args)
     t0 = time.time()
-    st = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
-                  max_cycles=args.max_cycles)
+    with profile_ctx(args):
+        st = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
+                      max_cycles=args.max_cycles)
+    wall = time.time() - t0
     out = S.finalize(st)
     print(json.dumps(dict(S.comparable(out), ipc=out["ipc"],
                           timeouts=out["timeouts"]), indent=1))
     flag = " [TIMEOUT: truncated at max_cycles]" if out["timeout"] else ""
     print(f"[zoo] {w.name}: {out['cycles']} GPU cycles, ipc={out['ipc']}, "
-          f"wall={time.time() - t0:.1f}s{flag}")
+          f"wall={wall:.1f}s{flag}")
+
+    if not args.no_manifest:
+        from repro.sim.config import split_config
+        scfg, _ = split_config(cfg)
+        tls = ({w.name: T.timeline(st).tolist()}
+               if T.enabled(scfg) else None)
+        mpath = T.write_manifest(
+            "zoo_run", scfg=scfg,
+            timings={"wall_s": round(wall, 4), "n_lanes": 1},
+            stats=[dict(out, workload=w.name)], timelines=tls,
+            lanes=[dict(describe(cfg), workload=w.name)],
+            extra={"workloads": [w.name],
+                   "profile_dir": args.profile or None})
+        print(f"[zoo] manifest: {mpath}")
 
 
 def main(argv=None):
@@ -178,6 +216,7 @@ def main(argv=None):
     ap.add_argument("--max-cycles", type=int, default=1 << 15)
     ap.add_argument("--check", action="store_true",
                     help="with --grid: verify every lane vs a solo run")
+    add_observability_args(ap)
     args = ap.parse_args(argv)
 
     if (args.sample_lat or args.sample_disp) and not args.grid:

@@ -206,6 +206,13 @@ class StaticConfig:
     mshr_per_sm: int
     addrset_cap: int
     mem_blocks: int
+    # in-trace counter-timeline telemetry (core/telemetry.py).  0 samples
+    # (the default) keeps the state pytree and the compiled program
+    # bit-for-bit identical to a telemetry-free build; > 0 preallocates a
+    # (telemetry_samples, N_COUNTERS) buffer sampled every
+    # ``telemetry_every``-th quantum.  Shape-determining, hence static.
+    telemetry_samples: int = 0
+    telemetry_every: int = 1
 
 
 def static_part(cfg) -> StaticConfig:
@@ -344,6 +351,11 @@ class GPUConfig:
     addrset_cap: int = 2048      # per-SM unique-address stat set
     scheduler: str = "gto"       # gto | lrr
     mem_blocks: int = 1 << 22    # simulated VRAM in 128 B blocks
+    # counter-timeline telemetry (core/telemetry.py): number of snapshot
+    # rows to preallocate (0 = off, the default — program unchanged) and
+    # the sampling cadence in quanta
+    telemetry_samples: int = 0
+    telemetry_every: int = 1
     # per-class timing tables (dynamic: sweepable lane-by-lane).  The LDG
     # latency entry is inert — load latency is cache-dependent.
     lat_of_class: tuple = LATENCY_OF_CLASS
@@ -356,6 +368,10 @@ class GPUConfig:
         assert self.warps_per_sm % self.n_subcores == 0, (
             f"warps_per_sm={self.warps_per_sm} must be divisible by "
             f"n_subcores={self.n_subcores}")
+        assert self.telemetry_samples >= 0, self.telemetry_samples
+        assert self.telemetry_every >= 1, (
+            f"telemetry_every={self.telemetry_every} must be ≥ 1 "
+            "(sampling cadence in quanta)")
         for name in ("lat_of_class", "disp_of_class"):
             tbl = getattr(self, name)
             if not isinstance(tbl, tuple):       # keep the config hashable

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.sim.config import N_UNITS, StaticConfig
 
 
@@ -19,7 +20,7 @@ def init_state(cfg: StaticConfig) -> dict:
     ns, w, m = cfg.n_sm, cfg.warps_per_sm, cfg.mshr_per_sm
     sc = cfg.n_subcores
     i32 = jnp.int32
-    return {
+    state = {
         "warp": {
             "pc": jnp.zeros((ns, w), i32),
             "active": jnp.zeros((ns, w), jnp.bool_),
@@ -84,6 +85,13 @@ def init_state(cfg: StaticConfig) -> dict:
             "ctas_launched": jnp.zeros((), i32),
         },
     }
+    # --- opt-in counter-timeline buffer (core/telemetry.py) ------------
+    # only materialized when the StaticConfig asks for samples, so the
+    # default state pytree (and hence every compiled program and the
+    # determinism golden) is unchanged when telemetry is off.
+    if telemetry.enabled(cfg):
+        state["telem"] = telemetry.init(cfg)
+    return state
 
 
 def reset_for_kernel(state: dict, cfg: StaticConfig) -> dict:
@@ -110,4 +118,8 @@ def reset_for_kernel(state: dict, cfg: StaticConfig) -> dict:
         "stats_sm": dict(state["stats_sm"]),
         "stats": dict(state["stats"]),
     }
+    # telemetry buffer (when present) persists across kernels like the
+    # accumulated stats — the timeline spans the whole workload
+    if "telem" in state:
+        new["telem"] = dict(state["telem"])
     return new
