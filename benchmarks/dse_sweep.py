@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
+from repro.core.batch import stack_kernels
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import make_sweep_runner, stack_dyn
@@ -29,11 +30,13 @@ def run() -> list[dict]:
     cfgs = default_grid(TINY, N_CONFIGS)
     scfg, dyn_batch = stack_dyn(cfgs)
     packed = [k.pack() for k in w.kernels]
+    stacked = stack_kernels(packed)
     max_cycles = min(MAX_CYCLES, 1 << 15)
 
-    batched = make_sweep_runner(scfg, packed, max_cycles=max_cycles)
+    batched = make_sweep_runner(scfg, max_cycles=max_cycles)
     t_batch = timeit(
-        lambda: jax.block_until_ready(batched(dyn_batch)), warmup=1, iters=3)
+        lambda: jax.block_until_ready(batched(stacked, dyn_batch)),
+        warmup=1, iters=3)
 
     runner = make_sm_runner(scfg, "vmap")
     solo = jax.jit(lambda dyn: run_workload(

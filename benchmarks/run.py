@@ -11,6 +11,8 @@ uploads so the perf trajectory is comparable across commits.
   det   — determinism across modes/devices/schedulers       (paper §1/§3)
   dse   — batched config sweep vs solo-run loop             (DSE layer)
   grid  — batched workloads × configs grid vs solo loop     (zoo frontend)
+  packing — bucketed ragged packing vs monolithic vs solo loop, plus
+            compile-cache cold/warm                         (RunPlan, PR 8)
   mesh  — distributed grid sweep vs 2-D ('cfg','sm') mesh shape
   tables — table-valued vs scalar-only dyn pytree lanes/sec (DynConfig)
   traces — real-trace ingest time + trace-row vs zoo-row lanes/sec
@@ -30,50 +32,57 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def perf_gate() -> list:
-    """Perf-trajectory gate (ROADMAP open item): compare the batched-grid
-    vs solo-loop speedup measured THIS run (experiments/bench/
-    grid_sweep.json — both paths timed on the same host in the same
-    process, so machine speed cancels out) against the committed reference
-    (benchmarks/perf_reference.json).  Returns a list of failure strings;
-    empty = gate passed."""
+    """Perf-trajectory gate (ROADMAP open item): compare the speedup
+    ratios measured THIS run against the committed reference
+    (benchmarks/perf_reference.json).  Each reference entry names a suite
+    artifact under experiments/bench/ (``file``, default
+    ``<key>_sweep.json``) and a ratio key inside it (``metric``, default
+    ``speedup``); both sides of every ratio are timed on the same host in
+    the same process, so machine speed cancels out.  A gated entry whose
+    suite was not run this time is skipped with a note (the full bench
+    run exercises them all).  Returns a list of failure strings; empty =
+    gate passed."""
     import json
 
     here = os.path.dirname(os.path.abspath(__file__))
     ref_path = os.path.join(here, "perf_reference.json")
-    cur_path = os.path.join(here, "..", "experiments", "bench",
-                            "grid_sweep.json")
     with open(ref_path) as f:
         ref = json.load(f)
-    try:
-        with open(cur_path) as f:
-            cur = json.load(f)
-    except FileNotFoundError:
-        return [f"--gate needs the grid suite's {cur_path} "
-                "(run with --only grid or no --only)"]
     fails = []
     for key, spec in ref.items():
-        if key != "grid":
+        if key.startswith("_") or not isinstance(spec, dict):
+            continue
+        fname = spec.get("file", f"{key}_sweep.json")
+        metric = spec.get("metric", "speedup")
+        cur_path = os.path.join(here, "..", "experiments", "bench", fname)
+        try:
+            with open(cur_path) as f:
+                cur = json.load(f)
+        except FileNotFoundError:
+            print(f"[gate] {key}: {fname} not produced this run — skipped "
+                  f"(run --only {key} or the full suite to gate it)")
             continue
         tol = float(spec.get("tolerance", 0.25))
-        floor = float(spec["speedup"]) * (1.0 - tol)
-        got = float(cur["speedup"])
+        floor = float(spec[metric]) * (1.0 - tol)
+        got = float(cur[metric])
         verdict = "OK" if got >= floor else "REGRESSION"
-        print(f"[gate] grid batched-vs-loop speedup: {got:.3f}x "
-              f"(reference {spec['speedup']}x, floor {floor:.3f}x "
-              f"at -{tol:.0%}) {verdict}")
+        print(f"[gate] {key} {metric}: {got:.3f}x (reference "
+              f"{spec[metric]}x, floor {floor:.3f}x at -{tol:.0%}) "
+              f"{verdict}")
         if got < floor:
             fails.append(
-                f"grid speedup {got:.3f}x < floor {floor:.3f}x — the "
-                "batched grid regressed vs the solo loop; if intentional, "
-                "update benchmarks/perf_reference.json")
+                f"{key} {metric} {got:.3f}x < floor {floor:.3f}x — "
+                f"regressed vs benchmarks/perf_reference.json; if "
+                "intentional, update the reference with the measured "
+                "value")
     return fails
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: fig1 fig5 fig6 fig7 det dse grid mesh "
-                         "tables traces roofline kernels")
+                    help="subset: fig1 fig5 fig6 fig7 det dse grid packing "
+                         "mesh tables traces roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     ap.add_argument("--gate", action="store_true",
@@ -81,13 +90,15 @@ def main() -> None:
                          "speedup regresses >tolerance vs "
                          "benchmarks/perf_reference.json")
     args = ap.parse_args()
-    if args.gate and args.only is not None and "grid" not in args.only:
-        args.only = list(args.only) + ["grid"]   # the gate needs its data
+    if args.gate and args.only is not None:
+        # the gate needs the gated suites' artifacts
+        args.only = list(args.only) + [
+            s for s in ("grid", "packing") if s not in args.only]
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
-                            grid_sweep, kernels_bench, mesh_sweep, roofline,
-                            table_sweep, traces_bench)
+                            grid_sweep, kernels_bench, mesh_sweep, packing,
+                            roofline, table_sweep, traces_bench)
     from benchmarks.common import save_bench
 
     suites = {
@@ -100,6 +111,7 @@ def main() -> None:
         "det": determinism.run,
         "dse": dse_sweep.run,
         "grid": grid_sweep.run,
+        "packing": packing.run,
         "mesh": (lambda: mesh_sweep.run(fast=args.fast)),
         "tables": table_sweep.run,
         "traces": traces_bench.run,

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
+from repro.core.batch import stack_kernels
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import make_sweep_runner, stack_dyn
@@ -47,9 +48,11 @@ def run() -> list[dict]:
     sm_runner = make_sm_runner(scfg, "vmap")
 
     # table-valued: the whole DynConfig (tables included) is traced
-    batched = make_sweep_runner(scfg, packed, max_cycles=max_cycles)
+    stacked = stack_kernels(packed)
+    batched = make_sweep_runner(scfg, max_cycles=max_cycles)
     t_tab = timeit(
-        lambda: jax.block_until_ready(batched(dyn_batch)), warmup=1, iters=3)
+        lambda: jax.block_until_ready(batched(stacked, dyn_batch)),
+        warmup=1, iters=3)
 
     # scalar-only: bake the default class tables in as constants; the lanes
     # then differ only in scalar knobs (the old 7-scalar pytree, emulated)

@@ -1,4 +1,4 @@
-"""Trace batching: pad + stack kernel traces so whole workloads vmap.
+"""Trace batching: pad/concat + stack kernel traces so whole workloads vmap.
 
 The engine reads a packed kernel trace through two traced scalars —
 ``n_instr`` (instruction fetch is clipped to ``pc < n_instr``) and
@@ -17,6 +17,25 @@ kernels stack into a leading scan axis (``stack_kernels``) and whole
 workloads stack into a leading *workload-lane* axis (``stack_workloads``)
 — the axis ``core/sweep.py:grid_sweep`` vmaps over.  Padding is proven
 inert by tests/test_batch_padding.py (padded vs unpadded bit-exact).
+
+Two additions serve the batching bet (PR 8):
+
+  · **Ragged layout** (``concat_kernels`` / ``concat_workloads``): instead
+    of padding every kernel to the longest one, a workload's instruction
+    streams are CONCATENATED into one flat array with a per-kernel
+    ``instr_base`` offset table — the ``cu_seqlens`` unpadded-varlen idiom.
+    Fetch sites add the kernel's base (sim/smcore.py); pc stays
+    kernel-local, so every simulated event (address generation included)
+    is bit-identical to the padded layout.  A 3-kernel workload with
+    lengths (500, 20, 20) carries 540 instruction slots instead of 1500.
+  · **Bucketed lane packing** (``bucket_workloads``): split the workload
+    lanes of a grid into ≤ max_buckets groups of similar padded shape or
+    predicted cost, so each bucket pads only to ITS max and short lanes
+    stop riding the longest lane's while_loop horizon
+    (core/sweep.py:grid_sweep with ``RunPlan.bucket_by``).  Predicted
+    cost is Σ n_instr × n_ctas per workload, refined by per-workload
+    cycle/lockstep-waste telemetry recorded in prior run manifests
+    (``cost_hints_from_manifests``).
 """
 from __future__ import annotations
 
@@ -24,8 +43,11 @@ import jax
 import jax.numpy as jnp
 
 # per-instruction (length-L) fields of a packed kernel trace; everything
-# else in the pack dict is a scalar (n_ctas, warps_per_cta, n_instr)
+# else in the pack dict is a scalar (n_ctas, warps_per_cta, n_instr —
+# plus instr_base in the ragged layout)
 INSTR_FIELDS = ("ops", "dep", "addr_mode", "addr_param")
+# per-kernel scalar fields (the leaves a ragged workload scans over)
+SCALAR_FIELDS = ("n_ctas", "warps_per_cta", "n_instr")
 
 
 def check_workload_fits(scfg, workload) -> None:
@@ -115,3 +137,182 @@ def stack_workloads(workloads: list) -> dict:
     stacks = [stack_kernels(p, n_instr=n_instr, n_kernels=n_kernels)
               for p in packs]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacks)
+
+
+# ---------------------------------------------------------------------------
+# ragged layout: flat instruction streams + per-kernel offset tables
+# ---------------------------------------------------------------------------
+
+def concat_kernels(packs: list, n_instr_total: int | None = None,
+                   n_kernels: int | None = None) -> dict:
+    """Concatenate packed kernels into the ragged workload layout.
+
+    Instruction arrays become ONE flat ``(n_instr_total,)`` array per
+    field; per-kernel scalars gain an ``instr_base`` offset table so the
+    engine fetches at ``instr_base + pc`` while pc stays kernel-local
+    (sim/smcore.py) — the ``cu_seqlens`` unpadded-varlen idiom.  Unlike
+    ``stack_kernels`` nothing pays for the longest kernel: the flat
+    length is Σ lengths, padded (inert zeros past every base+n_instr)
+    only up to a shared ``n_instr_total`` across workloads.
+    """
+    if not packs:
+        raise ValueError("empty kernel list")
+    lengths = [int(k["ops"].shape[0]) for k in packs]
+    total = sum(lengths)
+    if n_instr_total is None:
+        n_instr_total = total
+    if total > n_instr_total:
+        raise ValueError(
+            f"{total} instructions > n_instr_total={n_instr_total}")
+    if n_kernels is None:
+        n_kernels = len(packs)
+    if len(packs) > n_kernels:
+        raise ValueError(f"{len(packs)} kernels > n_kernels={n_kernels}")
+    i32 = jnp.int32
+    pad_k = n_kernels - len(packs)
+    bases = [0]
+    for length in lengths[:-1]:
+        bases.append(bases[-1] + length)
+    out = {}
+    for f in INSTR_FIELDS:
+        flat = jnp.concatenate([k[f] for k in packs])
+        out[f] = jnp.pad(flat, (0, n_instr_total - total))
+    for f in SCALAR_FIELDS:
+        fill = 1 if f == "warps_per_cta" else 0   # never a 0 divisor
+        out[f] = jnp.asarray([int(k[f]) for k in packs]
+                             + [fill] * pad_k, i32)
+    out["instr_base"] = jnp.asarray(bases + [0] * pad_k, i32)
+    return out
+
+
+def concat_workloads(workloads: list) -> dict:
+    """Ragged counterpart of ``stack_workloads``: each workload's kernels
+    concatenate flat (``concat_kernels``), then workloads stack into the
+    leading lane axis.  Instruction leaves come out
+    ``(n_workloads, n_instr_total_max)``; per-kernel scalars (including
+    ``instr_base``) come out ``(n_workloads, n_kernels_max)`` — the
+    engine scans the scalars and closes over the flat streams."""
+    if not workloads:
+        raise ValueError("empty workload list")
+    packs = [[k.pack() for k in w.kernels] for w in workloads]
+    if any(not p for p in packs):
+        raise ValueError("workload with no kernels")
+    n_kernels = max(len(p) for p in packs)
+    total = max(sum(int(k["ops"].shape[0]) for k in p) for p in packs)
+    rag = [concat_kernels(p, n_instr_total=total, n_kernels=n_kernels)
+           for p in packs]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rag)
+
+
+def split_ragged(trace: dict):
+    """Split a ragged workload trace into (per-kernel scalars to scan,
+    flat instruction streams to close over).  The engine's scan body
+    re-merges them into one kernel-trace dict for the SM runner."""
+    scan = {f: trace[f] for f in SCALAR_FIELDS + ("instr_base",)}
+    flat = {f: trace[f] for f in INSTR_FIELDS}
+    return scan, flat
+
+
+# ---------------------------------------------------------------------------
+# bucketed lane packing: group grid lanes by shape / predicted cost
+# ---------------------------------------------------------------------------
+
+def workload_cost(workload, cost_hints: dict | None = None) -> float:
+    """Predicted simulation cost of one workload: Σ n_instr × n_ctas over
+    its kernels — the static proxy for issued-instruction volume.  A
+    recorded hint (measured cycles + lockstep waste from a prior run
+    manifest, ``cost_hints_from_manifests``) overrides the proxy: real
+    stragglers beat static guesses."""
+    if cost_hints and workload.name in cost_hints:
+        return float(cost_hints[workload.name])
+    return float(sum(k.n_instr * k.n_ctas for k in workload.kernels))
+
+
+def workload_shape(workload) -> tuple:
+    """The padded-footprint key: (kernel count, longest kernel's n_instr).
+    Workloads sharing it pad each other for free in one bucket."""
+    return (len(workload.kernels),
+            max(k.n_instr for k in workload.kernels))
+
+
+def bucket_workloads(workloads: list, by: str = "shape",
+                     max_buckets: int = 4,
+                     cost_hints: dict | None = None) -> list:
+    """Partition workload-lane indices into ≤ ``max_buckets`` buckets of
+    similar padded shape ('shape') or predicted cost ('cost'), so each
+    bucket compiles its own program padded only to ITS max and short
+    lanes stop riding the longest lane's while_loop horizon.
+
+    Returns a list of index lists covering ``range(len(workloads))``
+    exactly once.  Deterministic: lanes are ordered by (key, index) and
+    split at the ``max_buckets - 1`` largest key gaps — zero-width gaps
+    (identical keys) never split, so bit-for-bit rerun stability holds
+    whatever the lane order.
+    """
+    n = len(workloads)
+    if by == "none" or n == 0:
+        return [list(range(n))]
+    if by == "shape":
+        keys = [float(k * l) for k, l in map(workload_shape, workloads)]
+    elif by == "cost":
+        keys = [workload_cost(w, cost_hints) for w in workloads]
+    else:
+        raise ValueError(f"unknown bucket policy {by!r}; "
+                         "use 'none', 'shape' or 'cost'")
+    order = sorted(range(n), key=lambda i: (keys[i], i))
+    gaps = [(keys[order[j + 1]] - keys[order[j]], j)
+            for j in range(n - 1)]
+    cuts = sorted(j for g, j in sorted(gaps, reverse=True)[:max_buckets - 1]
+                  if g > 0)
+    buckets, start = [], 0
+    for j in cuts:
+        buckets.append(order[start:j + 1])
+        start = j + 1
+    buckets.append(order[start:])
+    return buckets
+
+
+def cost_hints_from_manifests(run_dir: str = "experiments/runs") -> dict:
+    """Harvest measured per-workload cost from prior run manifests
+    (core/telemetry.py:write_manifest): for every stats entry carrying a
+    workload name, cost = cycles + final recorded ``lockstep_waste``
+    (the straggler tax a lane exported to its batch — a lane that wasted
+    others' quanta should bucket as if it were that long).  The max
+    across lanes/manifests wins; newer manifests override older ones at
+    equal key.  Missing/garbled manifests are skipped — hints are an
+    optimization, never a correctness input."""
+    import glob
+    import json
+    import os
+
+    hints: dict = {}
+    for path in sorted(glob.glob(os.path.join(run_dir, "*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            continue
+        waste = {}
+        try:
+            from repro.core.telemetry import COUNTERS
+            col = COUNTERS.index("lockstep_waste")
+            for name, rows in (payload.get("timelines") or {}).items():
+                if rows:
+                    # grid manifests key timelines "<workload>/<cfg>" —
+                    # fold the cfg lanes onto the workload, max wins
+                    base = name.rsplit("/", 1)[0]
+                    waste[base] = max(waste.get(base, 0.0),
+                                      float(rows[-1][col]))
+        except (ValueError, TypeError, IndexError, ImportError):
+            pass
+        for entry in payload.get("stats") or []:
+            if not isinstance(entry, dict) or "workload" not in entry:
+                continue
+            try:
+                cost = float(entry["cycles"]) + waste.get(
+                    entry["workload"], 0.0)
+            except (KeyError, TypeError, ValueError):
+                continue
+            name = entry["workload"]
+            hints[name] = max(hints.get(name, 0.0), cost)
+    return hints

@@ -122,7 +122,8 @@ def local_init(scfg: StaticConfig, n_sm_dev: int) -> dict:
 
 def make_dist_kernel_runner(scfg: StaticConfig, n_sm_dev: int,
                             exchange: str = "window",
-                            max_cycles: int = 1 << 20):
+                            max_cycles: int = 1 << 20,
+                            early_exit: bool = True):
     """Per-lane kernel quantum loop on LOCAL SM shards — the sharded
     analogue of ``engine.run_kernel``, pluggable into
     ``run_workload_stacked(kernel_runner=...)``."""
@@ -148,6 +149,13 @@ def make_dist_kernel_runner(scfg: StaticConfig, n_sm_dev: int,
                     s["telem"], out, packed, scfg, axis_name=SM_AXIS)
             return out
 
+        if early_exit:
+            # entry check runs BEFORE the loop (collectives are illegal in
+            # a while_loop cond); warp/req are local shards, so the live/
+            # busy counts psum over 'sm' — every device agrees, and an
+            # empty padding kernel skips its quantum (all-gathers included)
+            from repro.core.engine import mark_entry_converged
+            st = mark_entry_converged(st, packed, axis_name=SM_AXIS)
         st = jax.lax.while_loop(cond, step, st)
         if telem_on:
             st = dict(st, telem=telemetry.sample(
@@ -158,7 +166,7 @@ def make_dist_kernel_runner(scfg: StaticConfig, n_sm_dev: int,
 
 
 def _make_lane_runner(scfg: StaticConfig, n_sm_dev: int, exchange: str,
-                      max_cycles: int):
+                      max_cycles: int, early_exit: bool = True):
     """One (workload × config) lane, run on this device's SM shard.  The
     kernel-axis scan / reset / timeout accounting is the SHARED engine path
     (run_workload_stacked) — only the per-kernel quantum loop is swapped
@@ -167,7 +175,7 @@ def _make_lane_runner(scfg: StaticConfig, n_sm_dev: int, exchange: str,
     chunk = scfg.n_sm // n_sm_dev
     local_scfg = dataclasses.replace(scfg, n_sm=chunk)
     kernel_runner = make_dist_kernel_runner(scfg, n_sm_dev, exchange,
-                                            max_cycles)
+                                            max_cycles, early_exit)
 
     def run_lane(stacked, dyn):
         st = local_init(scfg, n_sm_dev)
@@ -179,7 +187,8 @@ def _make_lane_runner(scfg: StaticConfig, n_sm_dev: int, exchange: str,
 
 def make_dist_sweep_runner(scfg: StaticConfig, mesh: Mesh,
                            max_cycles: int = 1 << 20,
-                           exchange: str = "window"):
+                           exchange: str = "window",
+                           early_exit: bool = True):
     """One compiled program for a config sweep on a ('cfg', 'sm') mesh:
     ``(stacked_kernels, dyn_batch) -> batched final state``.  Lanes are
     sharded over 'cfg' (vmap over the device-local lanes inside the shard
@@ -188,7 +197,7 @@ def make_dist_sweep_runner(scfg: StaticConfig, mesh: Mesh,
 
     scfg = static_part(scfg)
     run_lane = _make_lane_runner(scfg, mesh.shape[SM_AXIS], exchange,
-                                 max_cycles)
+                                 max_cycles, early_exit)
 
     def body(stacked, dyn_batch):
         return jax.vmap(run_lane, in_axes=(None, 0))(stacked, dyn_batch)
@@ -202,7 +211,8 @@ def make_dist_sweep_runner(scfg: StaticConfig, mesh: Mesh,
 
 def make_dist_grid_runner(scfg: StaticConfig, mesh: Mesh,
                           max_cycles: int = 1 << 20,
-                          exchange: str = "window"):
+                          exchange: str = "window",
+                          early_exit: bool = True):
     """One compiled program for a whole (workload × config) grid on a
     ('cfg', 'sm') mesh — the distributed twin of
     ``core/sweep.py:make_grid_runner``.  The workload axis is replicated
@@ -212,7 +222,7 @@ def make_dist_grid_runner(scfg: StaticConfig, mesh: Mesh,
 
     scfg = static_part(scfg)
     run_lane = _make_lane_runner(scfg, mesh.shape[SM_AXIS], exchange,
-                                 max_cycles)
+                                 max_cycles, early_exit)
 
     def body(stacked, dyn_batch):
         over_cfgs = jax.vmap(run_lane, in_axes=(None, 0))

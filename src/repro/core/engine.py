@@ -36,6 +36,44 @@ from repro.sim.state import init_state, reset_for_kernel
 from repro.sim.trace import Workload
 
 
+def converged(ctrl: dict, warp: dict, req: dict, trace: dict,
+              axis_name=None):
+    """The ONE kernel-completion predicate every execution mode shares:
+    all CTAs dispatched, no live warp (active with work left or loads
+    pending), no in-flight memory request.  Pass ``axis_name`` when warp/
+    req hold only this device's SM shard — the counts psum over that mesh
+    axis so every device sees the full-machine verdict."""
+    live = warp["active"] & ~((warp["pc"] >= trace["n_instr"])
+                              & (warp["pending"] == 0))
+    n_live = jnp.sum(live, dtype=jnp.int32)
+    n_busy = jnp.sum(jnp.asarray(req["stage"] != 0), dtype=jnp.int32)
+    if axis_name is not None:
+        n_live = jax.lax.psum(n_live, axis_name)
+        n_busy = jax.lax.psum(n_busy, axis_name)
+    return (ctrl["next_cta"] >= trace["n_ctas"]) & (n_live == 0) & \
+        (n_busy == 0)
+
+
+def mark_entry_converged(state: dict, trace: dict, axis_name=None) -> dict:
+    """Early-exit: stamp ``done_cycle`` BEFORE the quantum while_loop when
+    the kernel is already converged at entry, so the loop runs ZERO
+    iterations instead of burning one full quantum discovering it.
+
+    After ``reset_for_kernel`` only an ``n_ctas == 0`` padding kernel can
+    be entry-converged (``next_cta`` starts at 0, so any real kernel still
+    has CTAs to dispatch) — and the workload scan masks those kernels'
+    state and cycles out entirely — so this is bit-exact by construction.
+    The savings are real though: every empty slot a short workload padded
+    up to the grid's kernel count previously cost a full quantum_step
+    (serial region + Δ SM cycles + collectives on the distributed path).
+    """
+    entry = converged(state["ctrl"], state["warp"], state["req"], trace,
+                      axis_name)
+    dc = jnp.where((state["ctrl"]["done_cycle"] < 0) & entry,
+                   state["ctrl"]["cycle"], state["ctrl"]["done_cycle"])
+    return dict(state, ctrl=dict(state["ctrl"], done_cycle=dc))
+
+
 def quantum_step(state: dict, trace: dict, cfg: StaticConfig,
                  dyn: DynConfig, sm_runner):
     t0 = state["ctrl"]["cycle"]
@@ -47,11 +85,7 @@ def quantum_step(state: dict, trace: dict, cfg: StaticConfig,
     warp, sm, req, stats_sm = sm_runner(warp, state["sm"], req,
                                         state["stats_sm"], trace, t0, dyn)
     cycle_end = t0 + cfg.quantum
-    n_instr = trace["n_instr"]
-    live = warp["active"] & ~((warp["pc"] >= n_instr)
-                              & (warp["pending"] == 0))
-    done = (ctrl["next_cta"] >= trace["n_ctas"]) & ~jnp.any(live) & \
-        jnp.all(req["stage"] == 0)
+    done = converged(ctrl, warp, req, trace)
     done_cycle = jnp.where((ctrl["done_cycle"] < 0) & done, cycle_end,
                            ctrl["done_cycle"])
     ctrl = dict(ctrl, cycle=cycle_end, done_cycle=done_cycle)
@@ -66,7 +100,8 @@ def quantum_step(state: dict, trace: dict, cfg: StaticConfig,
 
 
 def run_kernel(state: dict, trace: dict, cfg: StaticConfig,
-               dyn: DynConfig, sm_runner, max_cycles: int = 1 << 20):
+               dyn: DynConfig, sm_runner, max_cycles: int = 1 << 20,
+               early_exit: bool = True):
     def cond(st):
         return (st["ctrl"]["done_cycle"] < 0) & \
             (st["ctrl"]["cycle"] < max_cycles)
@@ -74,6 +109,8 @@ def run_kernel(state: dict, trace: dict, cfg: StaticConfig,
     def body(st):
         return quantum_step(st, trace, cfg, dyn, sm_runner)
 
+    if early_exit:
+        state = mark_entry_converged(state, trace)
     state = jax.lax.while_loop(cond, body, state)
     # force a final snapshot per kernel so the last written timeline row
     # always equals the final cumulative counters (core/telemetry.py)
@@ -93,7 +130,8 @@ def kernel_cycles(ctrl: dict):
 
 def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
                          dyn: DynConfig, sm_runner, max_cycles: int = 1 << 20,
-                         state_transform=None, kernel_runner=None) -> dict:
+                         state_transform=None, kernel_runner=None,
+                         early_exit: bool = True) -> dict:
     """Run a whole workload as ONE traced program: ``lax.scan`` over the
     stacked kernel axis (core/batch.py:stack_kernels).
 
@@ -101,10 +139,19 @@ def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
     run the kernel to completion, accumulate its cycles.  Padding kernels
     (``n_ctas == 0``) are masked out — the carried state passes through
     unchanged and 0 cycles are charged — so a workload padded to a shared
-    kernel count is bit-identical to its unpadded self.  A kernel that
-    hits ``max_cycles`` (``done_cycle`` still < 0) bumps the ``timeouts``
-    counter so truncated runs are reported, not silently counted as
-    complete (core/stats.py:finalize → ``timeout``).
+    kernel count is bit-identical to its unpadded self.  With
+    ``early_exit`` (default) those padding kernels also cost ~zero WORK:
+    they are converged at entry, so the quantum while_loop runs zero
+    iterations (``mark_entry_converged``) instead of one full quantum.
+    A kernel that hits ``max_cycles`` (``done_cycle`` still < 0) bumps
+    the ``timeouts`` counter so truncated runs are reported, not silently
+    counted as complete (core/stats.py:finalize → ``timeout``).
+
+    The stacked trace may be in either layout (core/batch.py): padded —
+    every leaf has leading kernel axis — or RAGGED (``instr_base``
+    present) — per-kernel scalars scan while the flat concatenated
+    instruction streams are closed over and re-merged per step, so short
+    kernels stop paying for the longest kernel's NOP slots.
 
     Being a single traced function of (state, stacked, dyn), this is what
     ``core/sweep.py`` vmaps over workload and config lanes.
@@ -117,14 +164,22 @@ def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
     timeout accounting stay shared across every execution mode.
     """
     zero = jnp.zeros((), jnp.int32)
+    ragged = "instr_base" in stacked
+    if ragged:
+        from repro.core.batch import split_ragged
+        scan_xs, flat = split_ragged(stacked)
+    else:
+        scan_xs, flat = stacked, {}
 
-    def body(carry, packed):
+    def body(carry, scanned):
         prev, total, timeouts = carry
+        packed = dict(flat, **scanned) if ragged else scanned
         st = reset_for_kernel(prev, cfg)
         if state_transform is not None:
             st = state_transform(st)
         if kernel_runner is None:
-            st = run_kernel(st, packed, cfg, dyn, sm_runner, max_cycles)
+            st = run_kernel(st, packed, cfg, dyn, sm_runner, max_cycles,
+                            early_exit)
         else:
             st = kernel_runner(st, packed, dyn)
         empty = packed["n_ctas"] == 0
@@ -136,7 +191,7 @@ def run_workload_stacked(state: dict, stacked: dict, cfg: StaticConfig,
         return (nxt, total, timeouts), None
 
     (state, total, timeouts), _ = jax.lax.scan(
-        body, (state, zero, zero), stacked)
+        body, (state, zero, zero), scan_xs)
     return dict(state, ctrl=dict(state["ctrl"], total_cycles=total,
                                  timeouts=timeouts))
 
@@ -175,22 +230,34 @@ def run_workload(state: dict, kernels: list, cfg: StaticConfig,
 
 
 def simulate(workload: Workload, cfg: GPUConfig, sm_runner,
-             max_cycles: int = 1 << 20, jit: bool = True,
-             state_transform=None) -> dict:
+             max_cycles: int = None, jit: bool = True,
+             state_transform=None, plan=None) -> dict:
     """Run all kernels of a workload; returns the final state.
 
     The whole workload — state init, per-kernel reset, every kernel's
     quantum loop — is one traced program (``lax.scan`` over the stacked
-    kernel axis), jitted once."""
-    from repro.core.batch import check_workload_fits, stack_kernels
+    kernel axis), jitted once.
 
+    Execution knobs (max_cycles, early_exit, trace layout, cache dir)
+    come from ``plan=`` (core/plan.py:RunPlan); the bare ``max_cycles=``
+    keyword still works for one release via the deprecation shim."""
+    from repro.core.batch import (check_workload_fits, concat_kernels,
+                                  stack_kernels)
+    from repro.core.plan import resolve_plan
+
+    plan = resolve_plan(plan, where="simulate", max_cycles=max_cycles)
+    plan.activate_caches()
     scfg, dyn = split_config(cfg)
     check_workload_fits(scfg, workload)
-    stacked = stack_kernels([k.pack() for k in workload.kernels])
+    packs = [k.pack() for k in workload.kernels]
+    stacked = (concat_kernels(packs) if plan.layout == "ragged"
+               else stack_kernels(packs))
 
     def run(d):
         return run_workload_stacked(init_state(scfg), stacked, scfg, d,
-                                    sm_runner, max_cycles, state_transform)
+                                    sm_runner, plan.max_cycles,
+                                    state_transform,
+                                    early_exit=plan.early_exit)
 
     if jit:
         run = jax.jit(run)

@@ -178,15 +178,10 @@ def make_shard_body(cfg, n_dev: int, exchange: str = "window"):
                                                       scfg, dyn))(
                 warp_l, sm, req_l, stats_sm)
         # --- done detection (replicated) --------------------------------
+        from repro.core.engine import converged
+
         cycle_end = t0 + scfg.quantum
-        n_instr = trace["n_instr"]
-        live_l = warp_l["active"] & ~((warp_l["pc"] >= n_instr)
-                                      & (warp_l["pending"] == 0))
-        any_live = jax.lax.psum(
-            jnp.sum(live_l, dtype=jnp.int32), "sm") > 0
-        busy = jax.lax.psum(
-            jnp.sum(req_l["stage"] != 0, dtype=jnp.int32), "sm") > 0
-        done = (ctrl["next_cta"] >= trace["n_ctas"]) & ~any_live & ~busy
+        done = converged(ctrl, warp_l, req_l, trace, axis_name="sm")
         done_cycle = jnp.where((ctrl["done_cycle"] < 0) & done, cycle_end,
                                ctrl["done_cycle"])
         ctrl = dict(ctrl, cycle=cycle_end, done_cycle=done_cycle)
@@ -248,7 +243,7 @@ def make_sharded_quantum(cfg: GPUConfig, mesh: Mesh,
 
 def run_kernel_sharded(state, trace, cfg: GPUConfig, mesh: Mesh,
                        max_cycles: int = 1 << 20, exchange: str = "window",
-                       dyn: dict = None):
+                       dyn: dict = None, early_exit: bool = True):
     if dyn is None:
         _, dyn = split_config(cfg)
     step = make_sharded_quantum(cfg, mesh, exchange)
@@ -260,6 +255,11 @@ def run_kernel_sharded(state, trace, cfg: GPUConfig, mesh: Mesh,
     def body(st):
         return step(st, trace, dyn)
 
+    if early_exit:
+        # state here holds the FULL per-SM arrays (out_specs reassemble
+        # outside the shard region), so no collective is needed
+        from repro.core.engine import mark_entry_converged
+        state = mark_entry_converged(state, trace)
     state = jax.lax.while_loop(cond, body, state)
     if "telem" in state:
         state = dict(state, telem=telemetry.sample(

@@ -24,6 +24,27 @@ stacked dynamic-config pytree is placed with an explicit NamedSharding,
 and every lane stays bit-identical to its solo run at any mesh shape
 (tests/test_mesh_sweep.py).
 
+PR 8 wins the batching bet — the monolithic grid ran at 0.62× a loop of
+solo programs because every lane padded to the global max and rode the
+longest lane's while_loop.  Three measures, all behind ``RunPlan``
+(core/plan.py):
+
+  · **bucketed lane packing** — ``plan.bucket_by='shape'|'cost'`` splits
+    the workload lanes into ≤ ``plan.max_buckets`` buckets of similar
+    padded shape / predicted cost (core/batch.py:bucket_workloads) and
+    compiles one program per bucket, each padded only to ITS max;
+  · **ragged layout** — ``plan.layout='ragged'`` concatenates each
+    workload's kernels flat with an ``instr_base`` offset table instead of
+    NOP-padding to the longest kernel (core/batch.py:concat_workloads);
+  · **compile caching** — an in-process AOT executable cache
+    (``timed_call(cache_key=...)``) plus jax's persistent compilation
+    cache (``plan.cache_dir``) amortize the compile across sweeps and
+    processes.
+
+Every bucketed/ragged lane stays bit-identical to its solo run
+(tests/test_bucketing.py); results come back in the original lane order
+whatever the bucketing.
+
 Usage:
     cfgs = [dataclasses.replace(TINY, l2_lat=v) for v in (16, 32, 64, ...)]
     result = sweep(workload, cfgs)
@@ -32,8 +53,8 @@ Usage:
     grid = grid_sweep([zoo_workload(n) for n in zoo_names()[:4]], cfgs)
     grid.stats[w][c]  # workload-major grid of finalized stat dicts
 
-    mesh = distribute.make_mesh(2, 2)          # 4 devices, ('cfg', 'sm')
-    grid = grid_sweep(workloads, cfgs, mesh=mesh)   # same stats, sharded
+    plan = RunPlan(mesh=distribute.make_mesh(2, 2), bucket_by="cost")
+    grid = grid_sweep(workloads, cfgs, plan=plan)   # same stats, sharded
 """
 from __future__ import annotations
 
@@ -45,9 +66,10 @@ import jax.numpy as jnp
 
 from repro.core import stats as S
 from repro.core import batch
-from repro.core.batch import stack_workloads
-from repro.core.engine import run_workload, run_workload_stacked
+from repro.core.batch import concat_workloads, stack_workloads
+from repro.core.engine import run_workload_stacked
 from repro.core.parallel import make_sm_runner
+from repro.core.plan import RunPlan, resolve_plan
 from repro.sim.config import StaticConfig, split_config
 from repro.sim.state import init_state
 from repro.sim.trace import Workload
@@ -89,18 +111,22 @@ def stack_dyn(cfgs):
     return scfg, dyn_batch
 
 
-def make_sweep_runner(scfg: StaticConfig, packed_kernels: list,
-                      mode: str = "vmap", max_cycles: int = 1 << 20):
-    """One compiled program: dyn_batch (lane-stacked pytree) -> final state
-    batch.  ``mode`` picks the SM-phase runner used inside every lane."""
+def make_sweep_runner(scfg: StaticConfig, mode: str = "vmap",
+                      max_cycles: int = 1 << 20, early_exit: bool = True):
+    """One compiled program: ``(stacked_kernels, dyn_batch) -> final state
+    batch``.  ``mode`` picks the SM-phase runner used inside every lane.
+
+    The stacked kernel trace is an ARGUMENT (it used to be closed over),
+    so one compiled executable serves every workload of the same stacked
+    shape — the property the AOT compile cache keys on (``timed_call``)."""
     sm_runner = make_sm_runner(scfg, mode)
 
-    def run_one(dyn):
-        state = init_state(scfg)
-        return run_workload(state, packed_kernels, scfg, dyn, sm_runner,
-                            max_cycles)
+    def run_one(stacked, dyn):
+        return run_workload_stacked(init_state(scfg), stacked, scfg, dyn,
+                                    sm_runner, max_cycles,
+                                    early_exit=early_exit)
 
-    return jax.jit(jax.vmap(run_one))
+    return jax.jit(jax.vmap(run_one, in_axes=(None, 0)))
 
 
 def take_lane(batched_state: dict, i: int) -> dict:
@@ -108,22 +134,71 @@ def take_lane(batched_state: dict, i: int) -> dict:
     return jax.tree_util.tree_map(lambda x: x[i], batched_state)
 
 
-def timed_call(runner, *args, n_lanes: int = 1) -> tuple:
+# in-process AOT executable cache: (program key, arg signature) -> compiled.
+# Entries are XLA executables, reusable as long as the process lives; the
+# cross-process analogue is jax's persistent compilation cache
+# (core/plan.py:enable_persistent_cache).
+_AOT_CACHE: dict = {}
+
+
+def _arg_signature(args) -> tuple:
+    """Shape/dtype/treedef fingerprint of a call's arguments — what an AOT
+    executable is specialized on (beyond the program key)."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (str(treedef),
+            tuple((tuple(getattr(x, "shape", ())),
+                   str(getattr(x, "dtype", type(x).__name__)))
+                  for x in leaves))
+
+
+def aot_cache_key(scfg, plan: RunPlan, what: str) -> tuple:
+    """Program identity for the AOT executable cache: everything that
+    shapes the traced program besides the argument shapes — the hashable
+    StaticConfig, the plan's execution knobs, and which runner (``what``:
+    'sweep' | 'grid').  The mesh contributes its shape and device ids."""
+    mesh_desc = None
+    if plan.mesh is not None:
+        mesh_desc = (tuple(plan.mesh.shape.items()),
+                     tuple(d.id for d in plan.mesh.devices.flat))
+    return (what, scfg, plan.mode, plan.exchange, plan.max_cycles,
+            plan.early_exit, mesh_desc)
+
+
+def clear_aot_cache() -> None:
+    _AOT_CACHE.clear()
+
+
+def timed_call(runner, *args, n_lanes: int = 1, cache_key=None) -> tuple:
     """Run a jitted program with the wall-clock split the run manifests
     record: AOT-lower + compile timed separately from execution, plus
     lanes/sec of the executed program.  Falls back to a plain (fused)
     call if AOT lowering is unavailable for the runner; the manifest then
     reports compile_s=None and the execute time includes compilation.
+
+    With ``cache_key`` (``aot_cache_key``) the compiled executable is
+    memoized on (key, argument shapes/dtypes): a warm call skips lower +
+    compile entirely — ``timings['aot_cache']`` reports 'hit'/'miss'.
     Returns (result, timings)."""
     timings = {"n_lanes": n_lanes}
-    try:
-        t0 = time.perf_counter()
-        compiled = runner.lower(*args).compile()
-        timings["compile_s"] = round(time.perf_counter() - t0, 4)
-        fn = compiled
-    except (AttributeError, TypeError, NotImplementedError):
-        timings["compile_s"] = None
-        fn = runner
+    fn = None
+    if cache_key is not None:
+        full_key = (cache_key, _arg_signature(args))
+        fn = _AOT_CACHE.get(full_key)
+        if fn is not None:
+            timings["compile_s"] = 0.0
+            timings["aot_cache"] = "hit"
+    if fn is None:
+        try:
+            t0 = time.perf_counter()
+            compiled = runner.lower(*args).compile()
+            timings["compile_s"] = round(time.perf_counter() - t0, 4)
+            fn = compiled
+            if cache_key is not None:
+                _AOT_CACHE[full_key] = compiled
+                timings["aot_cache"] = "miss"
+        except (AttributeError, TypeError, NotImplementedError):
+            timings["compile_s"] = None
+            fn = runner
     t0 = time.perf_counter()
     out = jax.block_until_ready(fn(*args))
     timings["execute_s"] = round(time.perf_counter() - t0, 4)
@@ -158,35 +233,42 @@ class SweepResult:
                 for i in range(self.n)}
 
 
-def sweep(workload: Workload, cfgs, mode: str = "vmap",
-          max_cycles: int = 1 << 20, mesh=None,
-          exchange: str = "window") -> SweepResult:
+def sweep(workload: Workload, cfgs, mode: str = None,
+          max_cycles: int = None, mesh=None,
+          exchange: str = None, plan: RunPlan = None) -> SweepResult:
     """Run ``workload`` under every config in one compiled, vmapped call.
 
-    With ``mesh`` (a 2-D ('cfg', 'sm') Mesh, core/distribute.py:make_mesh)
-    the lanes are sharded over the 'cfg' axis and each lane's SM axis over
-    'sm' — same stats, bit-exact, at any mesh shape."""
+    Execution knobs come from ``plan=`` (core/plan.py:RunPlan) — mesh
+    distribution, trace layout, early-exit, compile caching.  The legacy
+    flat kwargs (mode=/max_cycles=/mesh=/exchange=) still work for one
+    release via the deprecation shim.  With a mesh, lanes are sharded
+    over 'cfg' and each lane's SM axis over 'sm' — same stats, bit-exact,
+    at any mesh shape."""
+    plan = resolve_plan(plan, where="sweep", mode=mode,
+                        max_cycles=max_cycles, mesh=mesh, exchange=exchange)
+    plan.activate_caches()
+    cfgs = plan.apply_telemetry(cfgs)
     scfg, dyn_batch = stack_dyn(cfgs)
     batch.check_workload_fits(scfg, workload)
-    packed = [k.pack() for k in workload.kernels]
-    if mesh is not None:
+    packs = [k.pack() for k in workload.kernels]
+    stacked = (batch.concat_kernels(packs) if plan.layout == "ragged"
+               else batch.stack_kernels(packs))
+    key = aot_cache_key(scfg, plan, "sweep") if plan.aot_cache else None
+    if plan.mesh is not None:
         from repro.core import distribute
-        from repro.core.batch import stack_kernels
 
-        if mode != "vmap":
-            raise ValueError(
-                f"mode={mode!r} conflicts with mesh=: the distributed "
-                "path has its own in-lane execution (sharded SM axis); "
-                "pass mode='vmap' (the default) or drop mesh=")
-        distribute.check_mesh(mesh, scfg, len(cfgs))
-        dyn_batch = distribute.place_lanes(dyn_batch, mesh)
-        runner = distribute.make_dist_sweep_runner(scfg, mesh, max_cycles,
-                                                   exchange)
-        bstate, timings = timed_call(runner, stack_kernels(packed),
-                                     dyn_batch, n_lanes=len(cfgs))
+        distribute.check_mesh(plan.mesh, scfg, len(cfgs))
+        dyn_batch = distribute.place_lanes(dyn_batch, plan.mesh)
+        stacked = distribute.place_lanes(
+            stacked, plan.mesh, jax.sharding.PartitionSpec())
+        runner = distribute.make_dist_sweep_runner(
+            scfg, plan.mesh, plan.max_cycles, plan.exchange,
+            plan.early_exit)
     else:
-        runner = make_sweep_runner(scfg, packed, mode, max_cycles)
-        bstate, timings = timed_call(runner, dyn_batch, n_lanes=len(cfgs))
+        runner = make_sweep_runner(scfg, plan.mode, plan.max_cycles,
+                                   plan.early_exit)
+    bstate, timings = timed_call(runner, stacked, dyn_batch,
+                                 n_lanes=len(cfgs), cache_key=key)
     n = len(cfgs)
     stats = [S.finalize(take_lane(bstate, i)) for i in range(n)]
     return SweepResult(scfg=scfg, state=bstate, n=n, stats=stats,
@@ -198,17 +280,19 @@ def sweep(workload: Workload, cfgs, mode: str = "vmap",
 # ---------------------------------------------------------------------------
 
 def make_grid_runner(scfg: StaticConfig, mode: str = "vmap",
-                     max_cycles: int = 1 << 20):
+                     max_cycles: int = 1 << 20, early_exit: bool = True):
     """One compiled program for a whole (workload × config) grid:
     ``(stacked_workloads, dyn_batch) -> final state`` with two leading
     lane axes (workload-major).  The inner vmap runs every config lane of
     one workload; the outer vmap runs every workload lane — all of it one
-    XLA program, one dispatch per quantum for the entire grid."""
+    XLA program, one dispatch per quantum for the entire grid.  The
+    stacked trace may be padded or ragged (core/batch.py)."""
     sm_runner = make_sm_runner(scfg, mode)
 
     def run_one(stacked, dyn):
         return run_workload_stacked(init_state(scfg), stacked, scfg, dyn,
-                                    sm_runner, max_cycles)
+                                    sm_runner, max_cycles,
+                                    early_exit=early_exit)
 
     over_cfgs = jax.vmap(run_one, in_axes=(None, 0))
     return jax.jit(jax.vmap(over_cfgs, in_axes=(0, None)))
@@ -228,6 +312,20 @@ class GridResult:
     n_cfgs: int
     stats: list = field(default_factory=list)   # stats[w][c] finalized dict
     timings: dict = field(default_factory=dict)  # compile/execute split
+    # bucketed runs: [(workload_indices, bucket_state), ...] — each bucket
+    # was its own compiled program; ``state`` is then the first bucket's
+    # only if the grid was monolithic (single bucket), else None
+    buckets: list = None
+
+    def lane_state(self, w: int, c: int) -> dict:
+        """Final state of lane (workload ``w``, config ``c``), whichever
+        bucket it ran in."""
+        if self.buckets is not None:
+            for idxs, bstate in self.buckets:
+                if w in idxs:
+                    return take_grid_lane(bstate, idxs.index(w), c)
+            raise KeyError(f"workload index {w} in no bucket")
+        return take_grid_lane(self.state, w, c)
 
     def table(self, keys=("cycles", "ipc", "l1_miss", "l2_miss",
                           "dram_req")) -> list:
@@ -243,49 +341,99 @@ class GridResult:
         if not telemetry.enabled(self.scfg):
             return {}
         return {f"{self.names[w]}/{c}": telemetry.timeline(
-                    take_grid_lane(self.state, w, c))
+                    self.lane_state(w, c))
                 for w in range(self.n_workloads)
                 for c in range(self.n_cfgs)}
 
 
-def grid_sweep(workloads, cfgs, mode: str = "vmap",
-               max_cycles: int = 1 << 20, mesh=None,
-               exchange: str = "window") -> GridResult:
-    """Simulate every workload under every config — W×C lanes, ONE
-    compiled call.  Workloads are padded to shared (kernel count,
-    instruction count) with inert kernels/NOP slots (core/batch.py), so
-    each lane is bit-identical to a solo ``simulate()`` of that
-    (workload, config) pair.
+def _run_grid_bucket(workloads, scfg, dyn_batch, plan: RunPlan,
+                     n_cfgs: int):
+    """One compiled grid program over a bucket of workloads: stack (or
+    ragged-concat) the bucket's workloads — padded only to the BUCKET's
+    max shape — and run all its (workload × config) lanes."""
+    stacked = (concat_workloads(workloads) if plan.layout == "ragged"
+               else stack_workloads(workloads))
+    key = aot_cache_key(scfg, plan, "grid") if plan.aot_cache else None
+    if plan.mesh is not None:
+        from repro.core import distribute
 
-    With ``mesh`` (2-D ('cfg', 'sm'), core/distribute.py) config lanes
-    are sharded over 'cfg', each lane's SM axis over 'sm'; the workload
-    axis is replicated.  Stats are bit-exact at any mesh shape."""
+        stacked = distribute.place_lanes(
+            stacked, plan.mesh, jax.sharding.PartitionSpec())
+        runner = distribute.make_dist_grid_runner(
+            scfg, plan.mesh, plan.max_cycles, plan.exchange,
+            plan.early_exit)
+    else:
+        runner = make_grid_runner(scfg, plan.mode, plan.max_cycles,
+                                  plan.early_exit)
+    return timed_call(runner, stacked, dyn_batch,
+                      n_lanes=len(workloads) * n_cfgs, cache_key=key)
+
+
+def grid_sweep(workloads, cfgs, mode: str = None,
+               max_cycles: int = None, mesh=None,
+               exchange: str = None, plan: RunPlan = None) -> GridResult:
+    """Simulate every workload under every config — W×C lanes, one
+    compiled call per BUCKET.  Workloads are padded to a shared (kernel
+    count, instruction count) with inert kernels/NOP slots (or
+    ragged-concatenated, ``plan.layout``), so each lane is bit-identical
+    to a solo ``simulate()`` of that (workload, config) pair.
+
+    ``plan.bucket_by`` ('shape'/'cost') groups the workload lanes into
+    ≤ ``plan.max_buckets`` buckets of similar padded shape / predicted
+    cost (core/batch.py:bucket_workloads) and compiles one program per
+    bucket — short lanes stop riding the longest lane's while_loop, which
+    is what makes the batched grid beat a loop of solo programs
+    (benchmarks/packing.py).  Stats come back in the original lane order.
+
+    With a mesh (2-D ('cfg', 'sm'), core/distribute.py) config lanes are
+    sharded over 'cfg', each lane's SM axis over 'sm'; the workload axis
+    is replicated.  Stats are bit-exact at any mesh shape."""
+    plan = resolve_plan(plan, where="grid_sweep", mode=mode,
+                        max_cycles=max_cycles, mesh=mesh, exchange=exchange)
+    plan.activate_caches()
+    cfgs = plan.apply_telemetry(cfgs)
     scfg, dyn_batch = stack_dyn(cfgs)
     for w in workloads:
         batch.check_workload_fits(scfg, w)
-    stacked = stack_workloads(workloads)
-    if mesh is not None:
+    if plan.mesh is not None:
         from repro.core import distribute
 
-        if mode != "vmap":
-            raise ValueError(
-                f"mode={mode!r} conflicts with mesh=: the distributed "
-                "path has its own in-lane execution (sharded SM axis); "
-                "pass mode='vmap' (the default) or drop mesh=")
-        distribute.check_mesh(mesh, scfg, len(cfgs))
-        dyn_batch = distribute.place_lanes(dyn_batch, mesh)
-        stacked = distribute.place_lanes(
-            stacked, mesh, jax.sharding.PartitionSpec())
-        runner = distribute.make_dist_grid_runner(scfg, mesh, max_cycles,
-                                                  exchange)
-    else:
-        runner = make_grid_runner(scfg, mode, max_cycles)
+        distribute.check_mesh(plan.mesh, scfg, len(cfgs))
+        dyn_batch = distribute.place_lanes(dyn_batch, plan.mesh)
+
     nw, nc = len(workloads), len(cfgs)
-    bstate, timings = timed_call(runner, stacked, dyn_batch,
-                                 n_lanes=nw * nc)
-    stats = [[S.finalize(take_grid_lane(bstate, w, c)) for c in range(nc)]
-             for w in range(nw)]
-    return GridResult(scfg=scfg, state=bstate,
+    hints = None
+    if plan.bucket_by == "cost":
+        hints = batch.cost_hints_from_manifests()
+    groups = batch.bucket_workloads(workloads, plan.bucket_by,
+                                    plan.max_buckets, hints)
+
+    stats = [[None] * nc for _ in range(nw)]
+    bucket_states = []
+    timings = {"n_lanes": nw * nc, "n_buckets": len(groups),
+               "compile_s": 0.0, "execute_s": 0.0}
+    for idxs in groups:
+        bstate, tm = _run_grid_bucket([workloads[i] for i in idxs], scfg,
+                                      dyn_batch, plan, nc)
+        bucket_states.append((list(idxs), bstate))
+        for pos, w in enumerate(idxs):
+            for c in range(nc):
+                stats[w][c] = S.finalize(take_grid_lane(bstate, pos, c))
+        if tm.get("compile_s") is None or timings["compile_s"] is None:
+            timings["compile_s"] = None
+        else:
+            timings["compile_s"] = round(
+                timings["compile_s"] + tm["compile_s"], 4)
+        timings["execute_s"] = round(
+            timings["execute_s"] + tm["execute_s"], 4)
+        if "aot_cache" in tm:
+            timings["aot_cache"] = tm["aot_cache"] if \
+                timings.get("aot_cache") in (None, tm["aot_cache"]) \
+                else "mixed"
+    timings["lanes_per_s"] = round(
+        nw * nc / max(timings["execute_s"], 1e-9), 2)
+    single = bucket_states[0][1] if len(groups) == 1 else None
+    return GridResult(scfg=scfg, state=single,
                       names=[w.name for w in workloads],
                       n_workloads=nw, n_cfgs=nc, stats=stats,
-                      timings=timings)
+                      timings=timings, buckets=bucket_states)

@@ -29,7 +29,6 @@ whole sweep a single ``jit(vmap(engine))`` call (core/sweep.py).
 from __future__ import annotations
 
 import argparse
-import contextlib
 import dataclasses
 import json
 import time
@@ -41,6 +40,8 @@ from repro.core import telemetry as T
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import sweep
+from repro.launch.cli import (add_plan_args, add_sample_args, plan_from_args,
+                              profile_ctx)
 from repro.sim.config import (DYNAMIC_FIELDS, RTX3080TI, TINY, GPUConfig,
                               class_index, split_config)
 from repro.sim.state import init_state
@@ -91,42 +92,6 @@ def sample_table_grid(base: GPUConfig, n: int, sample_lat=(),
     return out
 
 
-def add_observability_args(ap: argparse.ArgumentParser) -> None:
-    """The shared observability flags (this launcher + launch/zoo.py):
-    in-trace counter-timeline telemetry, XLA profiler capture, and the
-    run-manifest opt-out."""
-    ap.add_argument("--telemetry", type=int, default=0, metavar="S",
-                    help="sample the per-SM counter timeline into S "
-                         "preallocated rows per lane (core/telemetry.py); "
-                         "0 = off (compiled program unchanged)")
-    ap.add_argument("--telemetry-every", type=int, default=1, metavar="N",
-                    help="sampling cadence in quanta (default 1)")
-    ap.add_argument("--profile", default="", metavar="DIR",
-                    help="capture a jax.profiler (XLA-level) trace of the "
-                         "run into DIR, alongside the manifest")
-    ap.add_argument("--no-manifest", action="store_true",
-                    help="skip writing the run manifest JSON under "
-                         "experiments/runs/")
-
-
-def apply_telemetry(cfgs: list, args) -> list:
-    """Enable the counter-timeline knobs on every lane (all lanes must
-    share one StaticConfig, so telemetry is all-lanes-or-none)."""
-    if args.telemetry <= 0:
-        return cfgs
-    return [dataclasses.replace(c, telemetry_samples=args.telemetry,
-                                telemetry_every=args.telemetry_every)
-            for c in cfgs]
-
-
-def profile_ctx(args):
-    """jax.profiler trace capture context for --profile DIR (nullcontext
-    when off)."""
-    if not getattr(args, "profile", ""):
-        return contextlib.nullcontext()
-    return jax.profiler.trace(args.profile)
-
-
 def describe(cfg: GPUConfig) -> dict:
     d = {k: getattr(cfg, k) for k in DYNAMIC_FIELDS}
     d["scheduler"] = cfg.scheduler
@@ -147,23 +112,12 @@ def main(argv=None):
                     help="sweep one config field instead of the default grid")
     ap.add_argument("--values", default="",
                     help="comma-separated values for --axis")
-    ap.add_argument("--sample-lat", nargs=3, action="append", default=[],
-                    metavar=("CLASS", "LO", "HI"),
-                    help="step the per-class result latency of CLASS "
-                         "(fp32/int32/sfu/tensor/ldg/stg/bar) over the N "
-                         "lanes from LO to HI; repeatable")
-    ap.add_argument("--sample-disp", nargs=3, action="append", default=[],
-                    metavar=("CLASS", "LO", "HI"),
-                    help="step the per-class dispatch interval of CLASS "
-                         "over the N lanes from LO to HI; repeatable")
-    ap.add_argument("--max-cycles", type=int, default=1 << 15)
-    ap.add_argument("--mesh", nargs=2, type=int, metavar=("A", "B"),
-                    help="distribute lanes over a 2-D ('cfg','sm') mesh — "
-                         "A cfg-devices × B sm-devices")
     ap.add_argument("--check", action="store_true",
                     help="verify every lane against a solo engine run")
-    add_observability_args(ap)
+    add_sample_args(ap, when="the N lanes")
+    add_plan_args(ap)
     args = ap.parse_args(argv)
+    plan = plan_from_args(args)
 
     base = BASES[args.base]
     if args.axis and (args.sample_lat or args.sample_disp):
@@ -180,16 +134,10 @@ def main(argv=None):
     else:
         cfgs = default_grid(base, args.n)
 
-    mesh = None
-    if args.mesh:
-        from repro.core.distribute import make_mesh
-        mesh = make_mesh(*args.mesh)
-
-    cfgs = apply_telemetry(cfgs, args)
     w = make_workload(args.workload, scale=args.scale)
     t0 = time.time()
     with profile_ctx(args):
-        result = sweep(w, cfgs, max_cycles=args.max_cycles, mesh=mesh)
+        result = sweep(w, cfgs, plan=plan)
     wall = time.time() - t0
 
     rows = []
@@ -214,7 +162,7 @@ def main(argv=None):
             stats=result.stats,
             timelines={k: v.tolist() for k, v in tls.items()} or None,
             lanes=[describe(c) for c in cfgs],
-            extra={"workload": w.name,
+            extra={"workload": w.name, "plan": plan.describe(),
                    "profile_dir": args.profile or None})
         print(f"[dse] manifest: {mpath}")
 

@@ -50,9 +50,11 @@ from repro.core import stats as S
 from repro.core import telemetry as T
 from repro.core.engine import simulate
 from repro.core.parallel import make_sm_runner
+from repro.core.plan import RunPlan
 from repro.core.sweep import grid_sweep
-from repro.launch.dse import (BASES, add_observability_args, apply_telemetry,
-                              default_grid, describe, profile_ctx,
+from repro.launch.cli import (add_plan_args, add_sample_args, plan_from_args,
+                              profile_ctx)
+from repro.launch.dse import (BASES, default_grid, describe,
                               sample_table_grid)
 from repro.sim.workloads import (TRACE_INGESTS, register_traces, zoo_names,
                                  zoo_workload)
@@ -72,7 +74,7 @@ def run_trace_summary(args, trace_names) -> None:
     if args.check:
         workloads = [zoo_workload(n) for n in trace_names]
         cfgs = default_grid(BASES[args.base], 2)
-        grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles)
+        grid = grid_sweep(workloads, cfgs, plan=plan_from_args(args))
         check_grid_vs_solo(grid, workloads, cfgs, args.max_cycles)
         print(f"[zoo] check OK: {len(workloads)}x{len(cfgs)} trace grid "
               "bit-exact vs solo runs")
@@ -90,10 +92,11 @@ def check_grid_vs_solo(grid, workloads, cfgs, max_cycles: int) -> int:
     lane is bit-identical.  The ONE --check oracle for both grid modes.
     Returns the verified lane count."""
     runner = make_sm_runner(grid.scfg, "vmap")
+    solo_plan = RunPlan(max_cycles=max_cycles)   # the padded solo oracle
     for w, workload in enumerate(workloads):
         for c, cfg in enumerate(cfgs):
             solo = lane_signature(S.finalize(simulate(
-                workload, cfg, runner, max_cycles=max_cycles)))
+                workload, cfg, runner, plan=solo_plan)))
             lane = lane_signature(grid.stats[w][c])
             assert lane == solo, (grid.names[w], c, lane, solo)
     return len(workloads) * len(cfgs)
@@ -119,25 +122,20 @@ def run_grid(args, trace_names=()) -> None:
                                  args.sample_disp)
     else:
         cfgs = default_grid(base, n_c)
-    cfgs = apply_telemetry(cfgs, args)
-
-    mesh = None
-    if args.mesh:
-        from repro.core.distribute import make_mesh
-        mesh = make_mesh(*args.mesh)
+    plan = plan_from_args(args)
 
     t0 = time.time()
     with profile_ctx(args):
-        grid = grid_sweep(workloads, cfgs, max_cycles=args.max_cycles,
-                          mesh=mesh)
+        grid = grid_sweep(workloads, cfgs, plan=plan)
     wall = time.time() - t0
     print(json.dumps(grid.table(), indent=1))
     lanes = n_w * n_c
     where = (f"{args.mesh[0]}x{args.mesh[1]} ('cfg','sm') mesh"
              if args.mesh else "one device")
     tm = grid.timings
-    print(f"[zoo] grid {n_w} workloads × {n_c} configs = {lanes} lanes: "
-          f"one compiled call on {where}, wall={wall:.1f}s "
+    print(f"[zoo] grid {n_w} workloads × {n_c} configs = {lanes} lanes "
+          f"(bucket_by={plan.bucket_by} layout={plan.layout} "
+          f"buckets={tm.get('n_buckets')}) on {where}, wall={wall:.1f}s "
           f"(compile={tm.get('compile_s')}s execute={tm.get('execute_s')}s "
           f"{tm.get('lanes_per_s')} lanes/s)")
 
@@ -151,7 +149,7 @@ def run_grid(args, trace_names=()) -> None:
             timelines={k: v.tolist() for k, v in tls.items()} or None,
             lanes=[dict(describe(cfg), workload=grid.names[w], cfg=c)
                    for w in range(n_w) for c, cfg in enumerate(cfgs)],
-            extra={"workloads": grid.names,
+            extra={"workloads": grid.names, "plan": plan.describe(),
                    "profile_dir": args.profile or None})
         print(f"[zoo] manifest: {mpath}")
 
@@ -162,11 +160,11 @@ def run_grid(args, trace_names=()) -> None:
 
 def run_one(args) -> None:
     w = zoo_workload(args.run, scale=_scale_for(args.run, args.scale))
-    [cfg] = apply_telemetry([BASES[args.base]], args)
+    plan = plan_from_args(args)
+    [cfg] = plan.apply_telemetry([BASES[args.base]])
     t0 = time.time()
     with profile_ctx(args):
-        st = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
-                      max_cycles=args.max_cycles)
+        st = simulate(w, cfg, make_sm_runner(cfg, "vmap"), plan=plan)
     wall = time.time() - t0
     out = S.finalize(st)
     print(json.dumps(dict(S.comparable(out), ipc=out["ipc"],
@@ -197,26 +195,15 @@ def main(argv=None):
     ap.add_argument("--run", default="", help="simulate one zoo workload")
     ap.add_argument("--grid", nargs=2, type=int, metavar=("W", "C"),
                     help="sweep first W workloads × C configs, one program")
-    ap.add_argument("--mesh", nargs=2, type=int, metavar=("A", "B"),
-                    help="with --grid: distribute over a 2-D ('cfg','sm') "
-                         "mesh — A cfg-devices × B sm-devices")
-    ap.add_argument("--sample-lat", nargs=3, action="append", default=[],
-                    metavar=("CLASS", "LO", "HI"),
-                    help="with --grid: config lanes step the per-class "
-                         "result latency of CLASS from LO to HI")
-    ap.add_argument("--sample-disp", nargs=3, action="append", default=[],
-                    metavar=("CLASS", "LO", "HI"),
-                    help="with --grid: config lanes step the per-class "
-                         "dispatch interval of CLASS from LO to HI")
     ap.add_argument("--trace", default="", metavar="FILE|DIR",
                     help="ingest Accel-sim SASS trace subset file(s) and "
                          "register them as trace:<stem> zoo workloads")
     ap.add_argument("--base", choices=sorted(BASES), default="tiny")
     ap.add_argument("--scale", type=float, default=0.05)
-    ap.add_argument("--max-cycles", type=int, default=1 << 15)
     ap.add_argument("--check", action="store_true",
                     help="with --grid: verify every lane vs a solo run")
-    add_observability_args(ap)
+    add_sample_args(ap, when="--grid")
+    add_plan_args(ap)
     args = ap.parse_args(argv)
 
     if (args.sample_lat or args.sample_disp) and not args.grid:

@@ -16,7 +16,6 @@ Timing abstraction (documented deviations from Accel-sim in DESIGN.md):
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, fields
 
 import jax
@@ -224,39 +223,27 @@ def static_part(cfg) -> StaticConfig:
         **{f.name: getattr(cfg, f.name) for f in fields(StaticConfig)})
 
 
-_warned_flat = False
-
-
-def _warn_flat_once() -> None:
-    global _warned_flat
-    if not _warned_flat:
-        _warned_flat = True
-        warnings.warn(
-            "split_config received a legacy flat dynamic dict without the "
-            "per-class 'lat'/'disp' tables; defaulting them to "
-            "LATENCY_OF_CLASS / DISPATCH_OF_CLASS.  Pass table entries "
-            "(or a DynConfig) to silence this.", DeprecationWarning,
-            stacklevel=3)
-
-
 def _check_override_keys(src: dict, need_all: bool) -> None:
     """ValueError naming unknown (always) and missing (when the dict must
     be self-contained, i.e. no GPUConfig to fall back on) override keys.
-    The table keys are exempt from 'missing' — the legacy flat dict
-    predates them and is shimmed to the default tables."""
+    A self-contained dict must supply EVERY dynamic key, the per-class
+    ``lat``/``disp`` tables included — the legacy default-table shim is
+    gone (build a ``DynConfig`` or pass the tables explicitly)."""
     unknown = sorted(set(src) - set(DYN_KEYS))
     if unknown:
         raise ValueError(
             f"unknown dynamic override key(s) {unknown}; valid keys are "
             f"{sorted(DYN_KEYS)}")
     if need_all:
-        missing = sorted(set(DYNAMIC_FIELDS + ("sched",)) - set(src))
+        missing = sorted(set(DYN_KEYS) - set(src))
         if missing:
             raise ValueError(
                 f"missing dynamic override key(s) {missing}: a StaticConfig "
                 "carries no timing values, so the override dict must supply "
-                f"every scalar field {sorted(DYNAMIC_FIELDS + ('sched',))} "
-                f"(tables {TABLE_FIELDS} default to the class tables)")
+                f"every dynamic key {sorted(DYN_KEYS)} — including the "
+                f"per-class tables {TABLE_FIELDS} (LATENCY_OF_CLASS / "
+                "DISPATCH_OF_CLASS are the defaults to start from, or pass "
+                "a typed DynConfig)")
 
 
 def split_config(cfg: "GPUConfig | StaticConfig", dyn_overrides=None):
@@ -271,9 +258,9 @@ def split_config(cfg: "GPUConfig | StaticConfig", dyn_overrides=None):
     ``dyn_overrides`` may be a ``DynConfig`` (used as-is) or a flat dict
     keyed by ``DYN_KEYS``.  Unknown/missing keys raise ``ValueError`` by
     name; table overrides are length-checked against ``N_CLASSES`` here,
-    at split time.  A legacy flat dict without the ``lat``/``disp`` table
-    keys is accepted (they default to the module class tables) with a
-    one-time ``DeprecationWarning``.
+    at split time.  A self-contained dict (StaticConfig route) must
+    supply the ``lat``/``disp`` tables too — the legacy default-table
+    shim was removed after its one-release deprecation window.
     """
     if isinstance(cfg, StaticConfig):
         if dyn_overrides is None:
@@ -284,17 +271,6 @@ def split_config(cfg: "GPUConfig | StaticConfig", dyn_overrides=None):
             return static, dyn_overrides
         src = dict(dyn_overrides)
         _check_override_keys(src, need_all=True)
-        have = [k for k in TABLE_FIELDS if k in src]
-        if not have:                     # legacy flat dict: shim + warn once
-            _warn_flat_once()
-            src["lat"] = LATENCY_OF_CLASS
-            src["disp"] = DISPATCH_OF_CLASS
-        elif len(have) == 1:             # one table alone is never intended
-            missing = set(TABLE_FIELDS) - set(have)
-            raise ValueError(
-                f"dynamic override supplies table {have} but not "
-                f"{sorted(missing)}: pass both tables (or neither, for the "
-                "legacy default-table shim)")
     else:
         static = static_part(cfg)
         if isinstance(dyn_overrides, DynConfig):

@@ -106,8 +106,13 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
         | warp["wait_bar"][w_ids]
     ready = exists & ~blocked & (warp["ready_at"][w_ids] <= t)
 
+    # ragged layout (core/batch.py:concat_kernels): instruction arrays are
+    # flat across kernels; fetch at instr_base + pc.  pc itself STAYS
+    # kernel-local — address generation hashes it, so offsetting pc would
+    # change simulated addresses and break bit-exactness vs padded runs.
+    base = trace["instr_base"] if "instr_base" in trace else 0
     pcc = jnp.clip(pc, 0, n_instr - 1)
-    op = trace["ops"][pcc]
+    op = trace["ops"][base + pcc]
     unit = jnp.asarray(UNIT_OF_CLASS, jnp.int32)[op]
     ufree = sm["unit_free"][sc][unit] <= t
     is_mem = (op == LDG) | (op == STG)
@@ -131,7 +136,8 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
 
     # ---- memory handling ---------------------------------------------------
     gwarp = warp["cta"][wsel] * trace["warps_per_cta"] + warp["wic"][wsel]
-    addr = gen_address(trace["addr_mode"][spc], trace["addr_param"][spc],
+    addr = gen_address(trace["addr_mode"][base + spc],
+                       trace["addr_param"][base + spc],
                        gwarp, spc, cfg.mem_blocks)
     mem_issue = do & (sop == LDG) | (do & (sop == STG))
     hit, sm_new = _l1_access(sm, addr, t, cfg)
@@ -162,7 +168,7 @@ def _issue_subcore(warp, sm, req, stats, trace, t, sc, cfg: StaticConfig,
     lat = dyn.core.lat[sop]
     lat = jnp.where(sop == LDG, jnp.where(hit, dyn.cache.l1_hit_lat, 1), lat)
     dep_next = jnp.where(spc + 1 < n_instr, trace["dep"][
-        jnp.clip(spc + 1, 0, n_instr - 1)], False)
+        base + jnp.clip(spc + 1, 0, n_instr - 1)], False)
     wait_lat = jnp.where(dep_next, jnp.maximum(lat, 1), 1)
     new_ready = t + wait_lat
     new_wait = dep_next & l1_miss          # wait on outstanding loads

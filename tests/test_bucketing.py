@@ -1,0 +1,257 @@
+"""PR 8 batching bet: RunPlan, bucketed lane packing, ragged layout,
+early exit, compile caching.
+
+The acceptance property stays the grid one — every bucketed/ragged lane
+bit-identical to its solo run (the mixed zoo+trace version lives in
+tests/test_zoo_grid.py, riding the solo-verified monolithic grid) — plus
+the PR's own observables: bucketing is deterministic and order-preserving,
+an entry-converged padding kernel charges ZERO quanta, a warm sweep skips
+lower+compile entirely, and the legacy flat kwargs still work (warn once).
+"""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.plan as plan_mod
+from repro.core import batch
+from repro.core import stats as S
+from repro.core.batch import (INSTR_FIELDS, SCALAR_FIELDS, bucket_workloads,
+                              concat_kernels, split_ragged, workload_cost,
+                              workload_shape)
+from repro.core.engine import run_kernel
+from repro.core.parallel import make_sm_runner
+from repro.core.plan import (RunPlan, enable_persistent_cache, resolve_plan)
+from repro.core.sweep import clear_aot_cache, sweep
+from repro.sim.config import TINY, split_config
+from repro.sim.state import init_state
+from repro.sim.workloads import zoo_workload
+
+MAX_CYCLES = 1 << 13
+SCALE = 0.005
+
+
+# ---------------------------------------------------------------------------
+# RunPlan validation + legacy shim
+# ---------------------------------------------------------------------------
+
+def test_runplan_rejects_bad_knobs():
+    for kw in (dict(mode="shard"), dict(exchange="bogus"),
+               dict(bucket_by="size"), dict(layout="flat"),
+               dict(max_cycles=0), dict(max_buckets=0),
+               dict(telemetry_samples=-1), dict(telemetry_every=0)):
+        with pytest.raises(ValueError):
+            RunPlan(**kw)
+
+
+def test_runplan_mesh_needs_cfg_sm_axes():
+    import numpy as np
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+    with pytest.raises(ValueError, match=r"\('cfg','sm'\) mesh"):
+        RunPlan(mesh=mesh)
+
+
+def test_resolve_plan_rejects_mixed_plan_and_legacy():
+    with pytest.raises(ValueError, match="not both"):
+        resolve_plan(RunPlan(), where="sweep", max_cycles=64)
+
+
+def test_resolve_plan_rejects_non_plan():
+    with pytest.raises(TypeError, match="must be a RunPlan"):
+        resolve_plan({"max_cycles": 64}, where="sweep")
+
+
+def test_resolve_plan_tolerates_old_positional_mode():
+    assert resolve_plan("seq", where="sweep").mode == "seq"
+    with pytest.raises(ValueError, match="mode given twice"):
+        resolve_plan("seq", where="sweep", mode="vmap")
+
+
+def test_legacy_kwargs_build_plan_and_warn_once(monkeypatch):
+    monkeypatch.setattr(plan_mod, "_warned_legacy", False)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        p = resolve_plan(None, where="sweep", max_cycles=64, mode="seq")
+        resolve_plan(None, where="sweep", max_cycles=64)
+    assert (p.max_cycles, p.mode) == (64, "seq")
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "plan=RunPlan" in str(deps[0].message)
+
+
+def test_runplan_describe_is_json_safe():
+    json.dumps(RunPlan(bucket_by="cost", layout="ragged").describe())
+
+
+# ---------------------------------------------------------------------------
+# persistent compile cache wiring
+# ---------------------------------------------------------------------------
+
+def test_persistent_cache_idempotent_and_rewire_refused(tmp_path,
+                                                        monkeypatch):
+    monkeypatch.setattr(plan_mod, "_persistent_cache_dir", None)
+    d = enable_persistent_cache(str(tmp_path / "cache"))
+    if d is None:            # jax build without a compilation-cache config
+        pytest.skip("no persistent compilation cache in this jax")
+    assert enable_persistent_cache(str(tmp_path / "cache")) == d
+    with pytest.raises(ValueError, match="refusing to re-wire"):
+        enable_persistent_cache(str(tmp_path / "elsewhere"))
+
+
+# ---------------------------------------------------------------------------
+# ragged concat (cu_seqlens idiom)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixed_packs():
+    w = zoo_workload("mixed", scale=SCALE)
+    return [k.pack() for k in w.kernels]
+
+
+def test_concat_kernels_offsets_and_shapes(mixed_packs):
+    tr = concat_kernels(mixed_packs)
+    lens = [int(p["n_instr"]) for p in mixed_packs]
+    total = sum(lens)
+    for f in INSTR_FIELDS:
+        assert tr[f].shape[0] == total
+    bases = [0]
+    for n in lens[:-1]:
+        bases.append(bases[-1] + n)
+    assert [int(b) for b in tr["instr_base"]] == bases
+    # the flat stream really is the kernels laid end to end
+    for p, b in zip(mixed_packs, bases):
+        assert jnp.array_equal(tr["ops"][b:b + int(p["n_instr"])], p["ops"])
+
+
+def test_concat_kernels_padding_slots_are_inert(mixed_packs):
+    k = len(mixed_packs)
+    tr = concat_kernels(mixed_packs, n_kernels=k + 2)
+    assert tr["n_ctas"].shape == (k + 2,)
+    assert [int(v) for v in tr["n_ctas"][k:]] == [0, 0]
+    # warps_per_cta pads with 1, never 0 — it divides in cta_issue
+    assert [int(v) for v in tr["warps_per_cta"][k:]] == [1, 1]
+    assert [int(v) for v in tr["instr_base"][k:]] == [0, 0]
+
+
+def test_split_ragged_partition(mixed_packs):
+    tr = concat_kernels(mixed_packs)
+    scan_xs, flat = split_ragged(tr)
+    assert set(scan_xs) == set(SCALAR_FIELDS) | {"instr_base"}
+    assert set(flat) == set(INSTR_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# bucketing (pure host-side grouping)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def zoo_mix():
+    return [zoo_workload(n, scale=SCALE)
+            for n in ("gemm_tiled", "mixed", "reduction_tree",
+                      "streaming_copy", "stencil")]
+
+
+def test_bucket_none_is_single_identity_bucket(zoo_mix):
+    groups = bucket_workloads(zoo_mix, by="none", max_buckets=4)
+    assert groups == [list(range(len(zoo_mix)))]
+
+
+def test_buckets_partition_and_respect_cap(zoo_mix):
+    for by in ("shape", "cost"):
+        for cap in (1, 2, 3, len(zoo_mix) + 3):
+            groups = bucket_workloads(zoo_mix, by=by, max_buckets=cap)
+            assert 1 <= len(groups) <= cap
+            flat = sorted(i for g in groups for i in g)
+            assert flat == list(range(len(zoo_mix)))
+            # deterministic: same call, same grouping
+            assert groups == bucket_workloads(zoo_mix, by=by,
+                                              max_buckets=cap)
+
+
+def test_shape_buckets_group_similar_lanes(zoo_mix):
+    """Buckets split at the LARGEST shape gaps: every bucket's internal
+    spread is no larger than the gap to the next bucket."""
+    groups = bucket_workloads(zoo_mix, by="shape", max_buckets=3)
+    keys = {i: workload_shape(w)[0] * workload_shape(w)[1]
+            for i, w in enumerate(zoo_mix)}
+    spans = [(min(keys[i] for i in g), max(keys[i] for i in g))
+             for g in groups]
+    spans.sort()
+    for (lo_a, hi_a), (lo_b, _) in zip(spans, spans[1:]):
+        assert hi_a <= lo_b      # buckets are contiguous key ranges
+
+
+def test_cost_hint_overrides_instruction_count(zoo_mix):
+    w = zoo_mix[0]
+    default = workload_cost(w)
+    assert default == sum(int(k.n_instr) * int(k.n_ctas)
+                          for k in w.kernels)
+    assert workload_cost(w, {w.name: 123.5}) == 123.5
+
+
+def test_cost_hints_from_manifests(tmp_path):
+    from repro.core.telemetry import COUNTERS
+    wi = COUNTERS.index("lockstep_waste")
+    tl = [[0.0] * len(COUNTERS), [0.0] * len(COUNTERS)]
+    tl[-1][wi] = 40.0
+    (tmp_path / "a.json").write_text(json.dumps({
+        "stats": [{"workload": "mixed", "cycles": 100}],
+        "timelines": {"mixed/0": tl}}))
+    (tmp_path / "junk.json").write_text("{not json")
+    hints = batch.cost_hints_from_manifests(str(tmp_path))
+    assert hints["mixed"] == 140.0
+
+
+# ---------------------------------------------------------------------------
+# early exit: an entry-converged padding kernel charges ZERO quanta
+# ---------------------------------------------------------------------------
+
+def test_empty_kernel_runs_zero_quanta():
+    scfg, dyn = split_config(TINY)
+    w = zoo_workload("streaming_copy", scale=SCALE)
+    tr = dict(w.kernels[0].pack())
+    tr["n_ctas"] = jnp.zeros((), jnp.int32)   # a grid padding slot
+    st = init_state(scfg)
+    runner = make_sm_runner(scfg, "vmap")
+    out = run_kernel(st, tr, scfg, dyn, runner, max_cycles=MAX_CYCLES,
+                     early_exit=True)
+    # zero while_loop iterations: the clock did not move, and done_cycle
+    # was stamped at entry
+    assert int(out["ctrl"]["cycle"]) == int(st["ctrl"]["cycle"])
+    assert int(out["ctrl"]["done_cycle"]) == int(st["ctrl"]["cycle"])
+    # without early exit the loop burns ≥1 full quantum discovering it
+    out_slow = run_kernel(st, tr, scfg, dyn, runner, max_cycles=MAX_CYCLES,
+                          early_exit=False)
+    assert int(out_slow["ctrl"]["cycle"]) > int(st["ctrl"]["cycle"])
+
+
+def test_real_kernel_never_entry_converged():
+    scfg, dyn = split_config(TINY)
+    w = zoo_workload("streaming_copy", scale=SCALE)
+    from repro.core.engine import mark_entry_converged
+    st = mark_entry_converged(init_state(scfg), w.kernels[0].pack())
+    assert int(st["ctrl"]["done_cycle"]) == -1
+
+
+# ---------------------------------------------------------------------------
+# AOT executable cache: a warm sweep skips lower+compile
+# ---------------------------------------------------------------------------
+
+def test_sweep_aot_cache_warm_hit():
+    clear_aot_cache()
+    w = zoo_workload("streaming_copy", scale=SCALE)
+    cfgs = [TINY, dataclasses.replace(TINY, scheduler="lrr")]
+    plan = RunPlan(max_cycles=MAX_CYCLES)
+    cold = sweep(w, cfgs, plan=plan)
+    assert cold.timings["aot_cache"] == "miss"
+    warm = sweep(w, cfgs, plan=plan)
+    assert warm.timings["aot_cache"] == "hit"
+    assert warm.timings["compile_s"] == 0.0
+    for a, b in zip(cold.stats, warm.stats):
+        assert S.comparable(a) == S.comparable(b)
+    # a different plan knob is a different program: no false sharing
+    other = sweep(w, cfgs, plan=RunPlan(max_cycles=MAX_CYCLES // 2))
+    assert other.timings["aot_cache"] == "miss"
+    clear_aot_cache()

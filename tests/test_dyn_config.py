@@ -1,18 +1,17 @@
-"""Typed DynConfig pytree: split-time validation, the flat-dict
-compatibility shim, sweep-build-time invariant checks, and the acceptance
-property of the table-valued refactor — DEFAULT tables reproduce the
-untouched determinism golden bit-exactly while perturbed-table lanes are
-per-lane distinct inside the same compiled sweep."""
+"""Typed DynConfig pytree: split-time validation (the legacy flat-dict
+default-table shim is GONE — self-contained dicts must supply the
+tables), sweep-build-time invariant checks, and the acceptance property
+of the table-valued refactor — DEFAULT tables reproduce the untouched
+determinism golden bit-exactly while perturbed-table lanes are per-lane
+distinct inside the same compiled sweep."""
 import dataclasses
 import json
 import os
-import warnings
 
 import jax
 import jax.numpy as jnp
 import pytest
 
-import repro.sim.config as C
 from repro.core import stats as S
 from repro.core.sweep import stack_dyn, sweep
 from repro.sim.config import (DISPATCH_OF_CLASS, LATENCY_OF_CLASS, N_CLASSES,
@@ -89,27 +88,28 @@ def test_gpuconfig_table_length_checked():
         GPUConfig(lat_of_class=(4, 4))
 
 
-def test_flat_dict_shim_warns_once_and_defaults_tables():
-    C._warned_flat = False
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        _, d1 = split_config(static_part(TINY), flat_scalars())
-        _, d2 = split_config(static_part(TINY), flat_scalars())
-    assert [w.category for w in rec] == [DeprecationWarning]
-    for d in (d1, d2):
-        assert tuple(int(v) for v in d.core.lat) == LATENCY_OF_CLASS
-        assert tuple(int(v) for v in d.core.disp) == DISPATCH_OF_CLASS
-    # shimmed flat dict and GPUConfig route agree leaf-for-leaf
-    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
-        lambda a, b: jnp.array_equal(a, b), d1, split_config(TINY)[1]))
+def test_tableless_flat_dict_rejected():
+    """The legacy default-table shim is gone: a self-contained flat dict
+    without the per-class 'lat'/'disp' tables raises by name instead of
+    silently defaulting them."""
+    with pytest.raises(ValueError, match=r"missing.*'disp', 'lat'"):
+        split_config(static_part(TINY), flat_scalars())
 
 
 def test_single_table_override_rejected():
     """'lat' without 'disp' (or vice versa) is never what the caller
-    meant — neither the legacy shim nor a full table override."""
+    meant — the missing table is named."""
     over = dict(flat_scalars(), lat=LATENCY_OF_CLASS)
-    with pytest.raises(ValueError, match=r"but not \['disp'\]"):
+    with pytest.raises(ValueError, match=r"missing.*'disp'"):
         split_config(static_part(TINY), over)
+
+
+def test_full_flat_dict_equals_gpuconfig_route():
+    over = dict(flat_scalars(), lat=LATENCY_OF_CLASS,
+                disp=DISPATCH_OF_CLASS)
+    _, d1 = split_config(static_part(TINY), over)
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: jnp.array_equal(a, b), d1, split_config(TINY)[1]))
 
 
 def test_dynconfig_passthrough():

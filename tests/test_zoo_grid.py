@@ -118,3 +118,32 @@ def test_mixed_trace_grid_rows_distinct(mixed_grid):
     _, result = mixed_grid
     rows = [S.comparable(result.stats[w][0]) for w in range(4)]
     assert len({tuple(sorted(r.items())) for r in rows}) == len(rows)
+
+
+# ---------------------------------------------------------------------------
+# bucketed + ragged packing (PR 8): same grid, per-bucket programs
+# ---------------------------------------------------------------------------
+
+def test_bucketed_ragged_mixed_grid_bit_exact(mixed_grid):
+    """The same mixed zoo+trace grid run bucketed-by-shape with the
+    ragged (instr_base-offset) trace layout: every lane must match the
+    monolithic padded grid — whose lanes the tests above pin bit-exact to
+    solo runs — so bucketing/raggedness change only the packing, never a
+    single counter.  Also pins the reassembly bookkeeping: stats come
+    back in the original lane order and lane_state() finds each lane in
+    whichever bucket ran it."""
+    from repro.core.plan import RunPlan
+
+    ws, mono = mixed_grid
+    plan = RunPlan(max_cycles=MAX_CYCLES, bucket_by="shape",
+                   max_buckets=3, layout="ragged")
+    bucketed = grid_sweep(ws, MIXED_CFGS, plan=plan)
+    assert bucketed.timings["n_buckets"] > 1    # the grid really split
+    for w in range(len(ws)):
+        for c in range(len(MIXED_CFGS)):
+            assert signature(bucketed.stats[w][c]) == \
+                signature(mono.stats[w][c]), (ws[w].name, c)
+    # lane_state reaches into the right bucket for every lane
+    for w in range(len(ws)):
+        st = bucketed.lane_state(w, 0)
+        assert int(st["ctrl"]["cycle"]) >= 0
