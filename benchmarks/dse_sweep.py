@@ -15,7 +15,7 @@ from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
 from repro.core.batch import stack_kernels
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
-from repro.core.sweep import make_sweep_runner, stack_dyn
+from repro.core.sweep import batched_init, make_sweep_runner, stack_dyn
 from repro.launch.dse import default_grid
 from repro.sim.config import TINY, split_config
 from repro.sim.state import init_state
@@ -33,9 +33,13 @@ def run() -> list[dict]:
     stacked = stack_kernels(packed)
     max_cycles = min(MAX_CYCLES, 1 << 15)
 
+    # the batched runner DONATES its state argument, so every timed call
+    # builds a fresh batch (included in the measured time — real runs pay
+    # the same init)
     batched = make_sweep_runner(scfg, max_cycles=max_cycles)
     t_batch = timeit(
-        lambda: jax.block_until_ready(batched(stacked, dyn_batch)),
+        lambda: jax.block_until_ready(
+            batched(batched_init(scfg, N_CONFIGS), stacked, dyn_batch)),
         warmup=1, iters=3)
 
     runner = make_sm_runner(scfg, "vmap")

@@ -25,7 +25,7 @@ from repro.core.batch import (check_workload_fits, stack_kernels,
                               stack_workloads)
 from repro.core.engine import run_workload_stacked
 from repro.core.parallel import make_sm_runner
-from repro.core.sweep import make_grid_runner, stack_dyn
+from repro.core.sweep import batched_init, make_grid_runner, stack_dyn
 from repro.launch.dse import default_grid
 from repro.sim.config import TINY, split_config
 from repro.sim.state import init_state
@@ -52,9 +52,11 @@ def run() -> list[dict]:
     n_w = len(workloads)
     lanes = n_w * N_CONFIGS
 
+    # donated state: a fresh (W, C) batch per timed call
     batched = make_grid_runner(scfg, max_cycles=max_cycles)
     t_batch = timeit(
-        lambda: jax.block_until_ready(batched(stacked, dyn_batch)),
+        lambda: jax.block_until_ready(batched(
+            batched_init(scfg, n_w, N_CONFIGS), stacked, dyn_batch)),
         warmup=1, iters=3)
 
     # loop path: one jitted program PER workload (its own stacked shape),

@@ -40,7 +40,7 @@ def bench_one(n_cfg: int, n_sm: int) -> dict:
 
     from repro.core import distribute
     from repro.core.batch import stack_workloads
-    from repro.core.sweep import make_grid_runner, stack_dyn
+    from repro.core.sweep import batched_init, make_grid_runner, stack_dyn
     from repro.launch.dse import default_grid
     from repro.sim.config import TINY
     from repro.sim.workloads import zoo_names, zoo_workload
@@ -50,6 +50,7 @@ def bench_one(n_cfg: int, n_sm: int) -> dict:
     cfgs = default_grid(TINY, N_CONFIGS)
     scfg, dyn_batch = stack_dyn(cfgs)
     stacked = stack_workloads(workloads)
+    mesh = None
     if (n_cfg, n_sm) == (1, 1):
         runner = make_grid_runner(scfg, max_cycles=MAX_CYCLES)
     else:
@@ -62,11 +63,18 @@ def bench_one(n_cfg: int, n_sm: int) -> dict:
                                                   max_cycles=MAX_CYCLES,
                                                   mesh=mesh)
 
+    def fresh_state():
+        # the runners DONATE the state batch, so every call gets its own
+        st = batched_init(scfg, N_WORKLOADS, N_CONFIGS)
+        if mesh is not None:
+            st = distribute.place_state(st, mesh, None, distribute.CFG_AXIS)
+        return st
+
     t0 = time.perf_counter()
-    state = jax.block_until_ready(runner(stacked, dyn_batch))
+    state = jax.block_until_ready(runner(fresh_state(), stacked, dyn_batch))
     compile_and_run = time.perf_counter() - t0
     t0 = time.perf_counter()
-    state = jax.block_until_ready(runner(stacked, dyn_batch))
+    state = jax.block_until_ready(runner(fresh_state(), stacked, dyn_batch))
     wall = time.perf_counter() - t0
     lanes = N_WORKLOADS * N_CONFIGS
     return {

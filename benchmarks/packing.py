@@ -37,7 +37,7 @@ from repro.core.batch import (bucket_workloads, check_workload_fits,
 from repro.core.engine import run_workload_stacked
 from repro.core.parallel import make_sm_runner
 from repro.core.plan import RunPlan
-from repro.core.sweep import (aot_cache_key, clear_aot_cache,
+from repro.core.sweep import (aot_cache_key, batched_init, clear_aot_cache,
                               make_grid_runner, stack_dyn, timed_call)
 from repro.launch.dse import default_grid
 from repro.sim.config import TINY, split_config
@@ -82,10 +82,13 @@ def run() -> list[dict]:
     t_loop = timeit(loop, warmup=1, iters=3)
 
     # -- monolithic: one program, global max padding ------------------------
+    # the grid runner DONATES its state batch, so every call builds a fresh
+    # one (a broadcast + copy — the same price a real grid_sweep pays)
     runner = make_grid_runner(scfg, max_cycles=max_cycles)
     mono = stack_workloads(workloads)
     t_mono = timeit(
-        lambda: jax.block_until_ready(runner(mono, dyn_batch)),
+        lambda: jax.block_until_ready(runner(
+            batched_init(scfg, n_w, N_CONFIGS), mono, dyn_batch)),
         warmup=1, iters=3)
 
     # -- bucketed: shape buckets, ragged layout, early exit -----------------
@@ -101,9 +104,9 @@ def run() -> list[dict]:
     def buckets_timed():
         compile_s, execute_s = 0.0, 0.0
         status = set()
-        for s in stacks:
-            _, tm = timed_call(runner, s, dyn_batch,
-                               n_lanes=lanes, cache_key=key)
+        for g, s in zip(groups, stacks):
+            _, tm = timed_call(runner, batched_init(scfg, len(g), N_CONFIGS),
+                               s, dyn_batch, n_lanes=lanes, cache_key=key)
             compile_s += tm["compile_s"] or 0.0
             execute_s += tm["execute_s"]
             status.add(tm.get("aot_cache", "none"))
@@ -118,11 +121,38 @@ def run() -> list[dict]:
 
     # steady-state bucketed execution (programs compiled above)
     def bucketed():
-        outs = [runner(s, dyn_batch)["ctrl"]["total_cycles"]
-                for s in stacks]
+        outs = [runner(batched_init(scfg, len(g), N_CONFIGS), s,
+                       dyn_batch)["ctrl"]["total_cycles"]
+                for g, s in zip(groups, stacks)]
         jax.block_until_ready(outs)
 
     t_buck = timeit(bucketed, warmup=1, iters=3)
+
+    # -- donation probe: is the state batch really not copied? --------------
+    # donate=True must free the input buffers (the output aliases them →
+    # peak live state is 1×); donate=False keeps input AND output live
+    # (2×).  Results must be bit-identical either way.
+    def live_mb(*trees):
+        return sum(x.nbytes for t in trees
+                   for x in jax.tree_util.tree_leaves(t)
+                   if not x.is_deleted()) / 1e6
+
+    runner_nd = make_grid_runner(scfg, max_cycles=max_cycles, donate=False)
+    st_d = batched_init(scfg, n_w, N_CONFIGS)
+    state_mb = live_mb(st_d)
+    out_d = jax.block_until_ready(runner(st_d, mono, dyn_batch))
+    donate_live = live_mb(st_d, out_d)
+    st_nd = batched_init(scfg, n_w, N_CONFIGS)
+    out_nd = jax.block_until_ready(runner_nd(st_nd, mono, dyn_batch))
+    nodonate_live = live_mb(st_nd, out_nd)
+    donation_freed = all(x.is_deleted()
+                         for x in jax.tree_util.tree_leaves(st_d))
+    bit_exact = all(
+        (a == b).all() for a, b in zip(
+            jax.tree_util.tree_leaves(jax.device_get(out_d)),
+            jax.tree_util.tree_leaves(jax.device_get(out_nd))))
+    assert donation_freed, "donated state batch was NOT freed (copied?)"
+    assert bit_exact, "donated vs undonated grid results differ"
 
     speedup_vs_loop = t_loop / t_buck
     rows = [{
@@ -149,6 +179,13 @@ def run() -> list[dict]:
         "name": "packing/compile_warm",
         "us_per_call": t_warm_wall * 1e6,
         "derived": f"compile_s={warm_compile:.2f} aot={warm_status}",
+    }, {
+        "name": f"packing/donation_{n_w}x{N_CONFIGS}",
+        "us_per_call": 0.0,
+        "derived": (f"state_mb={state_mb:.2f} "
+                    f"live_donate_mb={donate_live:.2f} "
+                    f"live_nodonate_mb={nodonate_live:.2f} "
+                    f"freed={donation_freed} bit_exact={bit_exact}"),
     }]
     save_json("packing", {
         "n_workloads": n_w, "n_configs": N_CONFIGS, "workloads": names,
@@ -160,6 +197,11 @@ def run() -> list[dict]:
         "compile_cold_s": cold_compile, "compile_warm_s": warm_compile,
         "speedup": speedup_vs_loop,
         "speedup_monolithic": t_loop / t_mono,
+        "donation": {
+            "state_mb": state_mb, "live_donate_mb": donate_live,
+            "live_nodonate_mb": nodonate_live,
+            "freed": donation_freed, "bit_exact": bit_exact,
+        },
     })
     return rows
 

@@ -16,6 +16,8 @@ uploads so the perf trajectory is comparable across commits.
   mesh  — distributed grid sweep vs 2-D ('cfg','sm') mesh shape
   tables — table-valued vs scalar-only dyn pytree lanes/sec (DynConfig)
   traces — real-trace ingest time + trace-row vs zoo-row lanes/sec
+  search — analytic surrogate configs/sec vs engine lanes/sec, and
+           search() vs exhaustive sweep wall clock       (core/search.py)
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
@@ -82,7 +84,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: fig1 fig5 fig6 fig7 det dse grid packing "
-                         "mesh tables traces roofline kernels")
+                         "mesh tables traces search roofline kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     ap.add_argument("--gate", action="store_true",
@@ -93,12 +95,13 @@ def main() -> None:
     if args.gate and args.only is not None:
         # the gate needs the gated suites' artifacts
         args.only = list(args.only) + [
-            s for s in ("grid", "packing") if s not in args.only]
+            s for s in ("grid", "packing", "search") if s not in args.only]
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
                             grid_sweep, kernels_bench, mesh_sweep, packing,
-                            roofline, table_sweep, traces_bench)
+                            roofline, search_bench, table_sweep,
+                            traces_bench)
     from benchmarks.common import save_bench
 
     suites = {
@@ -115,6 +118,7 @@ def main() -> None:
         "mesh": (lambda: mesh_sweep.run(fast=args.fast)),
         "tables": table_sweep.run,
         "traces": traces_bench.run,
+        "search": search_bench.run,
     }
     rows = []
     failed = False

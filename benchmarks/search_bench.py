@@ -1,0 +1,123 @@
+"""Search-driven DSE throughput: the analytic fast path vs the engine.
+
+Two comparisons, both on the SAME candidate space (SearchSpace.from_base
+around TINY, core/search.py):
+
+  · ``scorer`` — configs/sec of the analytical surrogate
+    (core/analytic.py: one basis matmul over thousands of candidates) vs
+    lanes/sec of a cycle-accurate ``sweep()`` over a small probe of the
+    same space.  The acceptance bar for the fast path is ``ratio`` ≥ 100×
+    (experiments/bench/search.json: ``analytic_ratio``).
+  · ``end-to-end`` — wall clock of a full ``search()`` (propose → score
+    N_SPACE candidates/round → verify top-k, SEARCH_ROUNDS rounds) vs an
+    exhaustive cycle-accurate ``sweep()`` of N_SPACE candidates drawn
+    from the same space with the same seed.  Their ``speedup`` ratio is
+    what ``run.py --gate`` pins against benchmarks/perf_reference.json —
+    the search must keep beating brute force by a wide margin, or the
+    pruning has stopped paying for itself.
+
+Both sides of every ratio run in this process on this host, so machine
+speed cancels.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SIM_SCALE, save_json, timeit
+from repro.core import analytic
+from repro.core.plan import RunPlan
+from repro.core.search import SearchSpace, search
+from repro.core.sweep import sweep
+from repro.sim import features as F
+from repro.sim.config import TINY, split_config
+from repro.workloads import make_workload
+
+BENCH = "hotspot"
+N_SCORE = 4096          # candidates per analytic scoring call
+N_PROBE = 8             # cycle-accurate lanes in the probe sweep
+N_SPACE = 64            # exhaustive-vs-search space size (end-to-end)
+SEARCH_ROUNDS = 3
+SEARCH_TOPK = 8
+MAX_CYCLES = 1 << 14
+SEED = 0
+
+
+def run() -> list[dict]:
+    base = TINY
+    scfg, _ = split_config(base)
+    w = make_workload(BENCH, scale=SIM_SCALE)
+    feats = F.workload_features(w, scfg)
+    space = SearchSpace.from_base(base)
+    plan = RunPlan(max_cycles=MAX_CYCLES, search_rounds=SEARCH_ROUNDS,
+                   search_topk=SEARCH_TOPK)
+
+    # -- scorer: analytic configs/sec vs cycle-accurate lanes/sec -----------
+    rng = np.random.Generator(np.random.PCG64(SEED))
+    cands = space.sample(rng, N_SCORE)
+    model = analytic.CostModel.default()
+    t_score = timeit(lambda: model.predict(feats, cands),
+                     warmup=1, iters=5)
+    analytic_cps = N_SCORE / max(t_score, 1e-9)
+
+    probe = [(scfg, analytic.decode(v)) for v in cands[:N_PROBE]]
+    sweep(w, probe, plan=plan)                       # compile outside timing
+    t_probe = timeit(lambda: sweep(w, probe, plan=plan), warmup=0, iters=3)
+    engine_lps = N_PROBE / max(t_probe, 1e-9)
+    ratio = analytic_cps / max(engine_lps, 1e-9)
+
+    # -- end to end: search() vs exhaustive sweep of the same space ---------
+    t0 = time.perf_counter()
+    result = search(w, space, plan=plan, seed=SEED, base=base,
+                    n_candidates=N_SPACE, calibrate_from=None)
+    t_search = time.perf_counter() - t0
+
+    rng = np.random.Generator(np.random.PCG64(SEED))
+    lanes = [(scfg, analytic.decode(v))
+             for v in space.sample(rng, N_SPACE)]
+    t0 = time.perf_counter()
+    exhaustive = sweep(w, lanes, plan=plan)
+    t_exh = time.perf_counter() - t0
+    exh_best = int(min(exhaustive.cycles))
+    speedup = t_exh / max(t_search, 1e-9)
+
+    rows = [{
+        "name": f"search/analytic_x{N_SCORE}",
+        "us_per_call": t_score * 1e6,
+        "derived": f"cands_per_s={analytic_cps:.0f}",
+    }, {
+        "name": f"search/engine_x{N_PROBE}",
+        "us_per_call": t_probe * 1e6,
+        "derived": (f"lanes_per_s={engine_lps:.2f} "
+                    f"analytic_ratio={ratio:.0f}x"),
+    }, {
+        "name": f"search/e2e_r{SEARCH_ROUNDS}k{SEARCH_TOPK}",
+        "us_per_call": t_search * 1e6,
+        "derived": (f"verified={result.n_verified}/"
+                    f"{result.n_scored} best={result.best_cycles}"),
+    }, {
+        "name": f"search/exhaustive_x{N_SPACE}",
+        "us_per_call": t_exh * 1e6,
+        "derived": (f"best={exh_best} "
+                    f"speedup={speedup:.2f}x"),
+    }]
+    save_json("search", {
+        "bench": BENCH, "scale": SIM_SCALE, "max_cycles": MAX_CYCLES,
+        "seed": SEED, "n_score": N_SCORE, "n_probe": N_PROBE,
+        "n_space": N_SPACE, "rounds": SEARCH_ROUNDS, "topk": SEARCH_TOPK,
+        "t_analytic_s": t_score, "t_probe_s": t_probe,
+        "analytic_cands_per_s": analytic_cps,
+        "engine_lanes_per_s": engine_lps, "analytic_ratio": ratio,
+        "t_search_s": t_search, "t_exhaustive_s": t_exh,
+        "search_best": result.best_cycles, "exhaustive_best": exh_best,
+        "n_verified": result.n_verified,
+        "calibration": result.model.calib,
+        "speedup": speedup,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -27,7 +27,7 @@ from benchmarks.common import MAX_CYCLES, SIM_SCALE, save_json, timeit
 from repro.core.batch import stack_kernels
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
-from repro.core.sweep import make_sweep_runner, stack_dyn
+from repro.core.sweep import batched_init, make_sweep_runner, stack_dyn
 from repro.launch.dse import sample_table_grid
 from repro.sim.config import (DISPATCH_OF_CLASS, LATENCY_OF_CLASS, TINY)
 from repro.sim.state import init_state
@@ -51,7 +51,8 @@ def run() -> list[dict]:
     stacked = stack_kernels(packed)
     batched = make_sweep_runner(scfg, max_cycles=max_cycles)
     t_tab = timeit(
-        lambda: jax.block_until_ready(batched(stacked, dyn_batch)),
+        lambda: jax.block_until_ready(
+            batched(batched_init(scfg, N_CONFIGS), stacked, dyn_batch)),
         warmup=1, iters=3)
 
     # scalar-only: bake the default class tables in as constants; the lanes

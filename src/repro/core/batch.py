@@ -235,13 +235,65 @@ def workload_shape(workload) -> tuple:
             max(k.n_instr for k in workload.kernels))
 
 
+def _gap_partition(keys: list, order: list, max_buckets: int) -> list:
+    """Split the sorted lane order at the ``max_buckets - 1`` largest
+    positive key gaps (zero-width gaps never split — rerun stability)."""
+    gaps = [(keys[order[j + 1]] - keys[order[j]], j)
+            for j in range(len(order) - 1)]
+    cuts = sorted(j for g, j in sorted(gaps, reverse=True)[:max_buckets - 1]
+                  if g > 0)
+    buckets, start = [], 0
+    for j in cuts:
+        buckets.append(order[start:j + 1])
+        start = j + 1
+    buckets.append(order[start:])
+    return buckets
+
+
+def choose_bucket_count(keys: list, overhead: float | None = None,
+                        max_k: int = 8) -> int:
+    """Cost-model-driven bucket count: pick the k ∈ [1, max_k] whose
+    gap-cut partition minimizes predicted TOTAL padded cost
+
+        Σ_buckets |bucket| · max(bucket key)  +  overhead · k
+
+    The first term is what a bucket actually executes (every lane rides
+    its bucket's longest lane); without the per-bucket ``overhead`` term
+    (one more compiled program per bucket — default: the mean lane cost)
+    it is monotone non-increasing in k and the argmin would always be
+    "one bucket per distinct key".  Ties break toward fewer buckets.
+    """
+    n = len(keys)
+    if n <= 1:
+        return max(n, 1)
+    if overhead is None:
+        overhead = sum(keys) / n
+    order = sorted(range(n), key=lambda i: (keys[i], i))
+    best_k, best_cost = 1, None
+    for k in range(1, min(max_k, n) + 1):
+        buckets = _gap_partition(keys, order, k)
+        cost = sum(len(b) * max(keys[i] for i in b) for b in buckets) \
+            + overhead * len(buckets)
+        if best_cost is None or cost < best_cost:
+            best_k, best_cost = k, cost
+    return best_k
+
+
 def bucket_workloads(workloads: list, by: str = "shape",
-                     max_buckets: int = 4,
+                     max_buckets: int | None = 4,
                      cost_hints: dict | None = None) -> list:
     """Partition workload-lane indices into ≤ ``max_buckets`` buckets of
     similar padded shape ('shape') or predicted cost ('cost'), so each
     bucket compiles its own program padded only to ITS max and short
     lanes stop riding the longest lane's while_loop horizon.
+
+    ``max_buckets=None`` picks the count automatically by minimizing the
+    predicted total padded cost over the bucket keys plus a per-bucket
+    compile-overhead term (``choose_bucket_count``) — the
+    cost-model-driven mode ``RunPlan(bucket_by='cost', max_buckets=None)``
+    reaches; ``core/sweep.py:grid_sweep`` seeds the cost keys from the
+    analytical model (core/analytic.py) when no measured manifest hints
+    exist.
 
     Returns a list of index lists covering ``range(len(workloads))``
     exactly once.  Deterministic: lanes are ordered by (key, index) and
@@ -259,17 +311,10 @@ def bucket_workloads(workloads: list, by: str = "shape",
     else:
         raise ValueError(f"unknown bucket policy {by!r}; "
                          "use 'none', 'shape' or 'cost'")
+    if max_buckets is None:
+        max_buckets = choose_bucket_count(keys)
     order = sorted(range(n), key=lambda i: (keys[i], i))
-    gaps = [(keys[order[j + 1]] - keys[order[j]], j)
-            for j in range(n - 1)]
-    cuts = sorted(j for g, j in sorted(gaps, reverse=True)[:max_buckets - 1]
-                  if g > 0)
-    buckets, start = [], 0
-    for j in cuts:
-        buckets.append(order[start:j + 1])
-        start = j + 1
-    buckets.append(order[start:])
-    return buckets
+    return _gap_partition(keys, order, max_buckets)
 
 
 def cost_hints_from_manifests(run_dir: str = "experiments/runs") -> dict:

@@ -41,7 +41,6 @@ from repro.core import telemetry
 from repro.core.engine import run_workload_stacked
 from repro.core.parallel import make_shard_body
 from repro.sim.config import StaticConfig, static_part
-from repro.sim.state import init_state
 
 CFG_AXIS, SM_AXIS = "cfg", "sm"
 
@@ -103,21 +102,19 @@ def place_lanes(tree, mesh: Mesh, spec: P = None):
     return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
 
 
-def local_init(scfg: StaticConfig, n_sm_dev: int) -> dict:
-    """This device's shard of the initial state: full ``init_state``, with
-    per-SM parts sliced to the local SM block.  ctrl keeps the FULL
-    ``sm_ids`` table — the serial region is computed replicated and CTA
-    round-robin follows original ids.  Must run inside the shard region
-    (uses ``axis_index('sm')``)."""
-    chunk = scfg.n_sm // n_sm_dev
-    st = init_state(scfg)
-    i = jax.lax.axis_index(SM_AXIS)
-    take = lambda x: jax.lax.dynamic_slice_in_dim(  # noqa: E731
-        x, i * chunk, chunk, axis=0)
-    out = dict(st)
-    for part in SHARDED_PARTS:
-        out[part] = jax.tree_util.tree_map(take, st[part])
-    return out
+def place_state(state: dict, mesh: Mesh, *prefix) -> dict:
+    """Place a host-built batched initial state (core/sweep.py:
+    batched_init) with the same per-part shardings the dist runners
+    produce (``state_specs``): per-SM parts sharded ('sm' blocks match
+    the contiguous slices the old in-region ``local_init`` took), the
+    rest replicated within an 'sm' group.  Placing the state OUTSIDE the
+    compiled program lets the runners DONATE it — the final state aliases
+    these buffers instead of allocating a second full copy."""
+    specs = state_specs(*prefix, telem="telem" in state)
+    return {k: jax.tree_util.tree_map(
+                lambda x, s=specs[k]: jax.device_put(
+                    x, NamedSharding(mesh, s)), v)
+            for k, v in state.items()}
 
 
 def make_dist_kernel_runner(scfg: StaticConfig, n_sm_dev: int,
@@ -177,8 +174,12 @@ def _make_lane_runner(scfg: StaticConfig, n_sm_dev: int, exchange: str,
     kernel_runner = make_dist_kernel_runner(scfg, n_sm_dev, exchange,
                                             max_cycles, early_exit)
 
-    def run_lane(stacked, dyn):
-        st = local_init(scfg, n_sm_dev)
+    def run_lane(st, stacked, dyn):
+        # st arrives pre-sharded by the shard_map in_specs: per-SM parts
+        # hold this device's contiguous SM block (the same slice the old
+        # in-region local_init took via axis_index), ctrl keeps the FULL
+        # sm_ids table — the serial region is computed replicated and CTA
+        # round-robin follows original ids
         return run_workload_stacked(st, stacked, local_scfg, dyn, None,
                                     max_cycles, kernel_runner=kernel_runner)
 
@@ -190,23 +191,26 @@ def make_dist_sweep_runner(scfg: StaticConfig, mesh: Mesh,
                            exchange: str = "window",
                            early_exit: bool = True):
     """One compiled program for a config sweep on a ('cfg', 'sm') mesh:
-    ``(stacked_kernels, dyn_batch) -> batched final state``.  Lanes are
-    sharded over 'cfg' (vmap over the device-local lanes inside the shard
-    region); each lane's SM axis is sharded over 'sm'."""
+    ``(state_batch, stacked_kernels, dyn_batch) -> batched final
+    state``.  Lanes are sharded over 'cfg' (vmap over the device-local
+    lanes inside the shard region); each lane's SM axis is sharded over
+    'sm'.  The initial state batch (placed by ``place_state``) is
+    DONATED — in and out shardings match part-by-part, so the final
+    state aliases the input buffers on every device."""
     from jax.experimental.shard_map import shard_map
 
     scfg = static_part(scfg)
     run_lane = _make_lane_runner(scfg, mesh.shape[SM_AXIS], exchange,
                                  max_cycles, early_exit)
+    specs = state_specs(CFG_AXIS, telem=telemetry.enabled(scfg))
 
-    def body(stacked, dyn_batch):
-        return jax.vmap(run_lane, in_axes=(None, 0))(stacked, dyn_batch)
+    def body(state, stacked, dyn_batch):
+        return jax.vmap(run_lane, in_axes=(0, None, 0))(
+            state, stacked, dyn_batch)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(P(), P(CFG_AXIS)),
-                   out_specs=state_specs(
-                       CFG_AXIS, telem=telemetry.enabled(scfg)),
-                   check_rep=False)
-    return jax.jit(fn)
+    fn = shard_map(body, mesh=mesh, in_specs=(specs, P(), P(CFG_AXIS)),
+                   out_specs=specs, check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
 
 
 def make_dist_grid_runner(scfg: StaticConfig, mesh: Mesh,
@@ -217,19 +221,20 @@ def make_dist_grid_runner(scfg: StaticConfig, mesh: Mesh,
     ('cfg', 'sm') mesh — the distributed twin of
     ``core/sweep.py:make_grid_runner``.  The workload axis is replicated
     (every device runs all W workloads for ITS config lanes); the config
-    axis is sharded over 'cfg', the SM axis over 'sm'."""
+    axis is sharded over 'cfg', the SM axis over 'sm'.  The (W, C)
+    initial state batch is DONATED, same as the sweep runner."""
     from jax.experimental.shard_map import shard_map
 
     scfg = static_part(scfg)
     run_lane = _make_lane_runner(scfg, mesh.shape[SM_AXIS], exchange,
                                  max_cycles, early_exit)
+    specs = state_specs(None, CFG_AXIS, telem=telemetry.enabled(scfg))
 
-    def body(stacked, dyn_batch):
-        over_cfgs = jax.vmap(run_lane, in_axes=(None, 0))
-        return jax.vmap(over_cfgs, in_axes=(0, None))(stacked, dyn_batch)
+    def body(state, stacked, dyn_batch):
+        over_cfgs = jax.vmap(run_lane, in_axes=(0, None, 0))
+        return jax.vmap(over_cfgs, in_axes=(0, 0, None))(
+            state, stacked, dyn_batch)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(P(), P(CFG_AXIS)),
-                   out_specs=state_specs(
-                       None, CFG_AXIS, telem=telemetry.enabled(scfg)),
-                   check_rep=False)
-    return jax.jit(fn)
+    fn = shard_map(body, mesh=mesh, in_specs=(specs, P(), P(CFG_AXIS)),
+                   out_specs=specs, check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))

@@ -253,12 +253,14 @@ def simulate(workload: Workload, cfg: GPUConfig, sm_runner,
     stacked = (concat_kernels(packs) if plan.layout == "ragged"
                else stack_kernels(packs))
 
-    def run(d):
-        return run_workload_stacked(init_state(scfg), stacked, scfg, d,
+    def run(state0, d):
+        return run_workload_stacked(state0, stacked, scfg, d,
                                     sm_runner, plan.max_cycles,
                                     state_transform,
                                     early_exit=plan.early_exit)
 
     if jit:
-        run = jax.jit(run)
-    return run(dyn)
+        # the freshly-built initial state is argument 0 and DONATED: the
+        # final state aliases its buffers instead of holding two copies
+        run = jax.jit(run, donate_argnums=(0,))
+    return run(init_state(scfg), dyn)

@@ -61,9 +61,12 @@ class RunPlan:
     exchange: str = "window"
     max_cycles: int = 1 << 20
     early_exit: bool = True
-    # packing
+    # packing.  max_buckets=None with bucket_by='cost' picks the bucket
+    # count automatically by minimizing the analytically-predicted total
+    # padded cost (core/batch.py:choose_bucket_count); with other
+    # policies None falls back to the classic ceiling of 4.
     bucket_by: str = "none"
-    max_buckets: int = 4
+    max_buckets: int | None = 4
     layout: str = "padded"
     # telemetry (sized into the lanes' StaticConfig — all lanes or none)
     telemetry_samples: int = 0
@@ -71,6 +74,12 @@ class RunPlan:
     # compile caching
     cache_dir: str | None = None
     aot_cache: bool = True
+    # analytic-prune search (core/search.py): proposer seed, rounds of
+    # propose→score→verify, and how many predicted-best candidates each
+    # round's ONE cycle-accurate sweep verifies
+    search_seed: int = 0
+    search_rounds: int = 3
+    search_topk: int = 8
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -94,9 +103,21 @@ class RunPlan:
             raise ValueError(
                 f"RunPlan.max_cycles must be positive, got "
                 f"{self.max_cycles}")
-        if self.max_buckets < 1:
+        if self.max_buckets is not None and self.max_buckets < 1:
             raise ValueError(
-                f"RunPlan.max_buckets must be ≥ 1, got {self.max_buckets}")
+                f"RunPlan.max_buckets must be ≥ 1 (or None for the "
+                f"cost-model-driven automatic count), got "
+                f"{self.max_buckets}")
+        if self.search_seed < 0:
+            raise ValueError(
+                f"RunPlan.search_seed must be ≥ 0, got {self.search_seed}")
+        if self.search_rounds < 1:
+            raise ValueError(
+                f"RunPlan.search_rounds must be ≥ 1, got "
+                f"{self.search_rounds}")
+        if self.search_topk < 1:
+            raise ValueError(
+                f"RunPlan.search_topk must be ≥ 1, got {self.search_topk}")
         if self.telemetry_samples < 0:
             raise ValueError(
                 f"RunPlan.telemetry_samples must be ≥ 0, got "
@@ -161,6 +182,9 @@ class RunPlan:
             "telemetry_samples": self.telemetry_samples,
             "telemetry_every": self.telemetry_every,
             "cache_dir": self.cache_dir, "aot_cache": self.aot_cache,
+            "search_seed": self.search_seed,
+            "search_rounds": self.search_rounds,
+            "search_topk": self.search_topk,
         }
 
 

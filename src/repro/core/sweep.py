@@ -111,22 +111,41 @@ def stack_dyn(cfgs):
     return scfg, dyn_batch
 
 
+def batched_init(scfg: StaticConfig, *lanes: int) -> dict:
+    """One ``init_state`` broadcast to the given leading lane axes —
+    (n,) for a sweep, (W, C) for a grid.  Built OUTSIDE the compiled
+    program so the runners can DONATE it (``donate_argnums=(0,)``): the
+    output state aliases the input buffers and the quantum loop never
+    holds two copies of the state in memory at once."""
+    st = init_state(scfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, tuple(lanes) + x.shape).copy(), st)
+
+
 def make_sweep_runner(scfg: StaticConfig, mode: str = "vmap",
-                      max_cycles: int = 1 << 20, early_exit: bool = True):
-    """One compiled program: ``(stacked_kernels, dyn_batch) -> final state
-    batch``.  ``mode`` picks the SM-phase runner used inside every lane.
+                      max_cycles: int = 1 << 20, early_exit: bool = True,
+                      donate: bool = True):
+    """One compiled program: ``(state_batch, stacked_kernels, dyn_batch)
+    -> final state batch``.  ``mode`` picks the SM-phase runner used
+    inside every lane.
 
     The stacked kernel trace is an ARGUMENT (it used to be closed over),
     so one compiled executable serves every workload of the same stacked
-    shape — the property the AOT compile cache keys on (``timed_call``)."""
+    shape — the property the AOT compile cache keys on (``timed_call``).
+    The initial state batch (``batched_init``) is an argument too, and
+    DONATED by default: the final state aliases its buffers, halving the
+    program's peak state footprint (benchmarks/packing.py probes this).
+    A donated input is dead after the call — build a fresh state per
+    invocation (``sweep`` does)."""
     sm_runner = make_sm_runner(scfg, mode)
 
-    def run_one(stacked, dyn):
-        return run_workload_stacked(init_state(scfg), stacked, scfg, dyn,
+    def run_one(state0, stacked, dyn):
+        return run_workload_stacked(state0, stacked, scfg, dyn,
                                     sm_runner, max_cycles,
                                     early_exit=early_exit)
 
-    return jax.jit(jax.vmap(run_one, in_axes=(None, 0)))
+    return jax.jit(jax.vmap(run_one, in_axes=(0, None, 0)),
+                   donate_argnums=(0,) if donate else ())
 
 
 def take_lane(batched_state: dict, i: int) -> dict:
@@ -254,6 +273,7 @@ def sweep(workload: Workload, cfgs, mode: str = None,
     stacked = (batch.concat_kernels(packs) if plan.layout == "ragged"
                else batch.stack_kernels(packs))
     key = aot_cache_key(scfg, plan, "sweep") if plan.aot_cache else None
+    state0 = batched_init(scfg, len(cfgs))
     if plan.mesh is not None:
         from repro.core import distribute
 
@@ -261,13 +281,15 @@ def sweep(workload: Workload, cfgs, mode: str = None,
         dyn_batch = distribute.place_lanes(dyn_batch, plan.mesh)
         stacked = distribute.place_lanes(
             stacked, plan.mesh, jax.sharding.PartitionSpec())
+        state0 = distribute.place_state(state0, plan.mesh,
+                                        distribute.CFG_AXIS)
         runner = distribute.make_dist_sweep_runner(
             scfg, plan.mesh, plan.max_cycles, plan.exchange,
             plan.early_exit)
     else:
         runner = make_sweep_runner(scfg, plan.mode, plan.max_cycles,
                                    plan.early_exit)
-    bstate, timings = timed_call(runner, stacked, dyn_batch,
+    bstate, timings = timed_call(runner, state0, stacked, dyn_batch,
                                  n_lanes=len(cfgs), cache_key=key)
     n = len(cfgs)
     stats = [S.finalize(take_lane(bstate, i)) for i in range(n)]
@@ -280,22 +302,26 @@ def sweep(workload: Workload, cfgs, mode: str = None,
 # ---------------------------------------------------------------------------
 
 def make_grid_runner(scfg: StaticConfig, mode: str = "vmap",
-                     max_cycles: int = 1 << 20, early_exit: bool = True):
+                     max_cycles: int = 1 << 20, early_exit: bool = True,
+                     donate: bool = True):
     """One compiled program for a whole (workload × config) grid:
-    ``(stacked_workloads, dyn_batch) -> final state`` with two leading
-    lane axes (workload-major).  The inner vmap runs every config lane of
-    one workload; the outer vmap runs every workload lane — all of it one
-    XLA program, one dispatch per quantum for the entire grid.  The
-    stacked trace may be padded or ragged (core/batch.py)."""
+    ``(state_grid, stacked_workloads, dyn_batch) -> final state`` with
+    two leading lane axes (workload-major).  The inner vmap runs every
+    config lane of one workload; the outer vmap runs every workload lane
+    — all of it one XLA program, one dispatch per quantum for the entire
+    grid.  The stacked trace may be padded or ragged (core/batch.py).
+    The (W, C)-batched initial state (``batched_init``) is DONATED by
+    default — final state aliases it, no second grid-state copy."""
     sm_runner = make_sm_runner(scfg, mode)
 
-    def run_one(stacked, dyn):
-        return run_workload_stacked(init_state(scfg), stacked, scfg, dyn,
+    def run_one(state0, stacked, dyn):
+        return run_workload_stacked(state0, stacked, scfg, dyn,
                                     sm_runner, max_cycles,
                                     early_exit=early_exit)
 
-    over_cfgs = jax.vmap(run_one, in_axes=(None, 0))
-    return jax.jit(jax.vmap(over_cfgs, in_axes=(0, None)))
+    over_cfgs = jax.vmap(run_one, in_axes=(0, None, 0))
+    return jax.jit(jax.vmap(over_cfgs, in_axes=(0, 0, None)),
+                   donate_argnums=(0,) if donate else ())
 
 
 def take_grid_lane(batched_state: dict, w: int, c: int) -> dict:
@@ -354,18 +380,21 @@ def _run_grid_bucket(workloads, scfg, dyn_batch, plan: RunPlan,
     stacked = (concat_workloads(workloads) if plan.layout == "ragged"
                else stack_workloads(workloads))
     key = aot_cache_key(scfg, plan, "grid") if plan.aot_cache else None
+    state0 = batched_init(scfg, len(workloads), n_cfgs)
     if plan.mesh is not None:
         from repro.core import distribute
 
         stacked = distribute.place_lanes(
             stacked, plan.mesh, jax.sharding.PartitionSpec())
+        state0 = distribute.place_state(state0, plan.mesh, None,
+                                        distribute.CFG_AXIS)
         runner = distribute.make_dist_grid_runner(
             scfg, plan.mesh, plan.max_cycles, plan.exchange,
             plan.early_exit)
     else:
         runner = make_grid_runner(scfg, plan.mode, plan.max_cycles,
                                   plan.early_exit)
-    return timed_call(runner, stacked, dyn_batch,
+    return timed_call(runner, state0, stacked, dyn_batch,
                       n_lanes=len(workloads) * n_cfgs, cache_key=key)
 
 
@@ -403,10 +432,21 @@ def grid_sweep(workloads, cfgs, mode: str = None,
 
     nw, nc = len(workloads), len(cfgs)
     hints = None
+    max_buckets = plan.max_buckets
     if plan.bucket_by == "cost":
         hints = batch.cost_hints_from_manifests()
+        if max_buckets is None:
+            # cost-model-driven bucket counts: lanes without a measured
+            # manifest hint get an analytically-predicted cost key, and
+            # bucket_workloads(max_buckets=None) minimizes the predicted
+            # total padded cost over the candidate counts
+            from repro.core import analytic
+            hints = dict({w.name: analytic.predicted_workload_cost(w, scfg)
+                          for w in workloads}, **hints)
+    elif max_buckets is None:
+        max_buckets = 4            # the classic ceiling for non-cost modes
     groups = batch.bucket_workloads(workloads, plan.bucket_by,
-                                    plan.max_buckets, hints)
+                                    max_buckets, hints)
 
     stats = [[None] * nc for _ in range(nw)]
     bucket_states = []

@@ -44,8 +44,12 @@ def add_plan_args(ap: argparse.ArgumentParser) -> None:
                          "similar padded shape / predicted cost and "
                          "compile one program per bucket "
                          "(core/batch.py:bucket_workloads)")
-    ap.add_argument("--max-buckets", type=int, default=4,
-                    help="bucket count ceiling for --bucket-by")
+    ap.add_argument("--max-buckets", type=int, default=None,
+                    help="bucket count ceiling for --bucket-by; unset with "
+                         "--bucket-by cost picks the count that minimizes "
+                         "the predicted total padded cost "
+                         "(core/batch.py:choose_bucket_count), unset "
+                         "otherwise keeps the classic ceiling of 4")
     ap.add_argument("--layout", choices=LAYOUTS, default="padded",
                     help="kernel-trace layout: 'ragged' concatenates "
                          "kernels with an instr_base offset table instead "
@@ -87,6 +91,37 @@ def add_sample_args(ap: argparse.ArgumentParser, when: str) -> None:
                     help=f"with {when}: config lanes step the per-class "
                          "dispatch interval of CLASS from LO to HI; "
                          "repeatable")
+    ap.add_argument("--sample-seed", type=int, default=None, metavar="SEED",
+                    help="draw the --sample-* lanes uniformly at random "
+                         "from [LO, HI] with this seed instead of the "
+                         "deterministic LO..HI linear steps (PCG64; same "
+                         "seed, same lanes)")
+
+
+def add_search_args(ap: argparse.ArgumentParser) -> None:
+    """The analytic-prune search knobs (core/search.py), dse-only."""
+    ap.add_argument("--search", action="store_true",
+                    help="search the config space instead of sweeping a "
+                         "fixed grid: propose candidates, score them ALL "
+                         "with the analytical surrogate (core/analytic.py),"
+                         " cycle-accurately verify only the predicted "
+                         "top-k per round (core/search.py)")
+    ap.add_argument("--search-rounds", type=int, default=3,
+                    help="propose→score→verify rounds (default 3)")
+    ap.add_argument("--search-topk", type=int, default=8,
+                    help="candidates verified per round in ONE sweep() "
+                         "call (default 8)")
+    ap.add_argument("--search-seed", type=int, default=0,
+                    help="proposer seed — the full candidate sequence and "
+                         "top-k are bit-reproducible per seed")
+    ap.add_argument("--search-cands", type=int, default=256,
+                    help="candidates proposed and analytically scored per "
+                         "round (default 256)")
+    ap.add_argument("--search-spread", type=float, default=2.0,
+                    help="search box half-width: each base config entry "
+                         "spans [v/spread, v*spread] (default 2.0); "
+                         "--sample-* triples override per-class table "
+                         "bounds")
 
 
 def plan_from_args(args: argparse.Namespace) -> RunPlan:
@@ -107,6 +142,10 @@ def plan_from_args(args: argparse.Namespace) -> RunPlan:
         aot_cache=not args.no_aot_cache,
         telemetry_samples=args.telemetry,
         telemetry_every=args.telemetry_every,
+        # search knobs exist only on parsers that called add_search_args
+        search_seed=getattr(args, "search_seed", 0),
+        search_rounds=getattr(args, "search_rounds", 3),
+        search_topk=getattr(args, "search_topk", 8),
     )
 
 

@@ -34,14 +34,15 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro.core import stats as S
 from repro.core import telemetry as T
 from repro.core.engine import run_workload
 from repro.core.parallel import make_sm_runner
 from repro.core.sweep import sweep
-from repro.launch.cli import (add_plan_args, add_sample_args, plan_from_args,
-                              profile_ctx)
+from repro.launch.cli import (add_plan_args, add_sample_args,
+                              add_search_args, plan_from_args, profile_ctx)
 from repro.sim.config import (DYNAMIC_FIELDS, RTX3080TI, TINY, GPUConfig,
                               class_index, split_config)
 from repro.sim.state import init_state
@@ -71,13 +72,18 @@ def axis_grid(base: GPUConfig, axis: str, values: list) -> list:
 
 
 def sample_table_grid(base: GPUConfig, n: int, sample_lat=(),
-                      sample_disp=()) -> list:
-    """n configs stepping per-class table entries evenly over [lo, hi].
+                      sample_disp=(), seed: int = None) -> list:
+    """n configs sampling per-class table entries over [lo, hi].
 
     ``sample_lat`` / ``sample_disp``: sequences of (class_name, lo, hi)
-    triples; several triples vary jointly across the same n lanes.  Lane i
-    gets entry = round(lo + i/(n-1) * (hi-lo)) — deterministic, endpoints
-    included."""
+    triples; several triples vary jointly across the same n lanes.
+    Default: lane i gets entry = round(lo + i/(n-1) * (hi-lo)) —
+    deterministic linear steps, endpoints included.  With ``seed`` each
+    lane instead draws every sampled entry uniformly from [lo, hi]
+    (PCG64: same seed, same lanes — the randomized-probe complement to
+    the linear sweep, shared by both launchers via --sample-seed)."""
+    rng = (np.random.Generator(np.random.PCG64(seed))
+           if seed is not None else None)
     out = []
     for i in range(n):
         frac = i / max(n - 1, 1)
@@ -85,8 +91,10 @@ def sample_table_grid(base: GPUConfig, n: int, sample_lat=(),
         disp = list(base.disp_of_class)
         for table, samples in ((lat, sample_lat), (disp, sample_disp)):
             for cls, lo, hi in samples:
-                table[class_index(str(cls))] = round(
-                    int(lo) + frac * (int(hi) - int(lo)))
+                lo, hi = int(lo), int(hi)
+                table[class_index(str(cls))] = (
+                    int(rng.integers(lo, hi + 1)) if rng is not None
+                    else round(lo + frac * (hi - lo)))
         out.append(dataclasses.replace(base, lat_of_class=tuple(lat),
                                        disp_of_class=tuple(disp)))
     return out
@@ -102,6 +110,63 @@ def describe(cfg: GPUConfig) -> dict:
     return d
 
 
+def _solo_checker(scfg, w, max_cycles):
+    """One compiled UNBATCHED program that replays any lane solo: dyn is
+    a traced argument, so all the solo runs share a single compilation."""
+    packed = [k.pack() for k in w.kernels]
+    runner = make_sm_runner(scfg, "vmap")
+    return jax.jit(lambda dyn: run_workload(
+        init_state(scfg), packed, scfg, dyn, runner, max_cycles))
+
+
+def run_search(args, plan, base, w):
+    """--search: analytic-prune search instead of a fixed-grid sweep."""
+    from repro.core import analytic
+    from repro.core.search import SearchSpace, search
+
+    space = SearchSpace.from_base(base, spread=args.search_spread,
+                                  sample_lat=args.sample_lat,
+                                  sample_disp=args.sample_disp)
+    t0 = time.time()
+    with profile_ctx(args):
+        result = search(w, space, plan=plan,
+                        n_candidates=args.search_cands,
+                        calibrate_from=None if args.no_manifest else "",
+                        log=print)
+    wall = time.time() - t0
+
+    rep = result.report()
+    print(json.dumps(rep, indent=1))
+    print(f"[dse] search {w.name}: scored {result.n_scored} candidates "
+          f"analytically, verified {result.n_verified} cycle-accurately "
+          f"over {len(result.rounds)} rounds, best={result.best_cycles} "
+          f"cycles, wall={wall:.1f}s")
+
+    if not args.no_manifest:
+        # verified lanes + stats + the workload's feature vector: exactly
+        # the rows calibration_rows_from_manifests harvests to warm-start
+        # the next search of this StaticConfig
+        mpath = T.write_manifest(
+            "search", scfg=result.scfg, mesh_shape=args.mesh,
+            timings={"wall_s": round(wall, 4)},
+            stats=[st for _, _, st in result.verified],
+            lanes=[analytic.describe_vec(v) for v, _, _ in result.verified],
+            extra={"workload": w.name, "plan": plan.describe(),
+                   "features": result.features.tolist(),
+                   "search": rep, "profile_dir": args.profile or None})
+        print(f"[dse] manifest: {mpath}")
+
+    if args.check:
+        solo_run = _solo_checker(result.scfg, w, args.max_cycles)
+        for i, (vec, _, st) in enumerate(result.verified):
+            dyn = split_config(result.scfg, analytic.decode(vec))[1]
+            solo = S.comparable(S.finalize(solo_run(dyn)))
+            lane = S.comparable(st)
+            assert lane == solo, (i, lane, solo)
+        print(f"[dse] check OK: all {result.n_verified} verified lanes "
+              "bit-exact vs solo")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--base", choices=sorted(BASES), default="tiny")
@@ -115,11 +180,19 @@ def main(argv=None):
     ap.add_argument("--check", action="store_true",
                     help="verify every lane against a solo engine run")
     add_sample_args(ap, when="the N lanes")
+    add_search_args(ap)
     add_plan_args(ap)
     args = ap.parse_args(argv)
     plan = plan_from_args(args)
 
     base = BASES[args.base]
+    if args.search:
+        if args.axis:
+            raise SystemExit("--search and --axis are separate modes; "
+                             "pick one (--sample-* triples shape the "
+                             "search box instead)")
+        w = make_workload(args.workload, scale=args.scale)
+        return run_search(args, plan, base, w)
     if args.axis and (args.sample_lat or args.sample_disp):
         raise SystemExit("--axis and --sample-lat/--sample-disp are "
                          "separate sweep modes; pick one")
@@ -130,7 +203,7 @@ def main(argv=None):
         cfgs = axis_grid(base, args.axis, values)
     elif args.sample_lat or args.sample_disp:
         cfgs = sample_table_grid(base, args.n, args.sample_lat,
-                                 args.sample_disp)
+                                 args.sample_disp, seed=args.sample_seed)
     else:
         cfgs = default_grid(base, args.n)
 
@@ -167,13 +240,7 @@ def main(argv=None):
         print(f"[dse] manifest: {mpath}")
 
     if args.check:
-        # one compiled UNBATCHED program checks every lane: dyn is a traced
-        # argument, so the N solo runs share a single compilation
-        scfg = result.scfg
-        packed = [k.pack() for k in w.kernels]
-        runner = make_sm_runner(scfg, "vmap")
-        solo_run = jax.jit(lambda dyn: run_workload(
-            init_state(scfg), packed, scfg, dyn, runner, args.max_cycles))
+        solo_run = _solo_checker(result.scfg, w, args.max_cycles)
         for i, cfg in enumerate(cfgs):
             solo = S.comparable(S.finalize(solo_run(split_config(cfg)[1])))
             lane = S.comparable(result.stats[i])

@@ -119,7 +119,7 @@ def run_grid(args, trace_names=()) -> None:
                  for n in names[:n_w]]
     if args.sample_lat or args.sample_disp:
         cfgs = sample_table_grid(base, n_c, args.sample_lat,
-                                 args.sample_disp)
+                                 args.sample_disp, seed=args.sample_seed)
     else:
         cfgs = default_grid(base, n_c)
     plan = plan_from_args(args)
