@@ -18,6 +18,8 @@ uploads so the perf trajectory is comparable across commits.
   traces — real-trace ingest time + trace-row vs zoo-row lanes/sec
   search — analytic surrogate configs/sec vs engine lanes/sec, and
            search() vs exhaustive sweep wall clock       (core/search.py)
+  serving — continuously batched sim server: jobs/sec, p50/p99 latency,
+            warm vs cold, vs one-process-per-job       (core/service.py)
   roofline — per-(arch×shape×mesh) roofline terms           (§Roofline)
   kernels  — Pallas kernel microbenchmarks
 """
@@ -84,7 +86,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: fig1 fig5 fig6 fig7 det dse grid packing "
-                         "mesh tables traces search roofline kernels")
+                         "mesh tables traces search serving roofline "
+                         "kernels")
     ap.add_argument("--fast", action="store_true",
                     help="skip subprocess device sweeps")
     ap.add_argument("--gate", action="store_true",
@@ -95,12 +98,13 @@ def main() -> None:
     if args.gate and args.only is not None:
         # the gate needs the gated suites' artifacts
         args.only = list(args.only) + [
-            s for s in ("grid", "packing", "search") if s not in args.only]
+            s for s in ("grid", "packing", "search", "serving")
+            if s not in args.only]
 
     from benchmarks import (determinism, dse_sweep, fig1_sim_time,
                             fig5_speedup, fig6_scheduler, fig7_ctas,
                             grid_sweep, kernels_bench, mesh_sweep, packing,
-                            roofline, search_bench, table_sweep,
+                            roofline, search_bench, serving, table_sweep,
                             traces_bench)
     from benchmarks.common import save_bench
 
@@ -119,6 +123,7 @@ def main() -> None:
         "tables": table_sweep.run,
         "traces": traces_bench.run,
         "search": search_bench.run,
+        "serving": serving.run,
     }
     rows = []
     failed = False

@@ -43,7 +43,7 @@ for i in range(10):
 print(f"[train] 10 steps, loss={float(metrics['loss']):.3f}")
 
 # ---- 3. serve ---------------------------------------------------------------
-from repro.launch.serve import generate
+from repro.models.factory import generate
 from repro.models import factory
 
 prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_reduced
-from repro.launch.serve import generate
+from repro.models.factory import generate
 from repro.models import factory
 
 

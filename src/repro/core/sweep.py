@@ -398,6 +398,30 @@ def _run_grid_bucket(workloads, scfg, dyn_batch, plan: RunPlan,
                       n_lanes=len(workloads) * n_cfgs, cache_key=key)
 
 
+def bucket_groups(workloads, plan: RunPlan, scfg: StaticConfig) -> list:
+    """The one bucket-forming policy ``grid_sweep`` and ``pair_sweep``
+    share: partition the workload-lane indices per ``plan.bucket_by`` /
+    ``plan.max_buckets`` (core/batch.py:bucket_workloads), seeding 'cost'
+    keys from measured run-manifest hints refined by the analytic model
+    when the bucket count is chosen automatically."""
+    hints = None
+    max_buckets = plan.max_buckets
+    if plan.bucket_by == "cost":
+        hints = batch.cost_hints_from_manifests()
+        if max_buckets is None:
+            # cost-model-driven bucket counts: lanes without a measured
+            # manifest hint get an analytically-predicted cost key, and
+            # bucket_workloads(max_buckets=None) minimizes the predicted
+            # total padded cost over the candidate counts
+            from repro.core import analytic
+            hints = dict({w.name: analytic.predicted_workload_cost(w, scfg)
+                          for w in workloads}, **hints)
+    elif max_buckets is None:
+        max_buckets = 4            # the classic ceiling for non-cost modes
+    return batch.bucket_workloads(workloads, plan.bucket_by,
+                                  max_buckets, hints)
+
+
 def grid_sweep(workloads, cfgs, mode: str = None,
                max_cycles: int = None, mesh=None,
                exchange: str = None, plan: RunPlan = None) -> GridResult:
@@ -431,22 +455,7 @@ def grid_sweep(workloads, cfgs, mode: str = None,
         dyn_batch = distribute.place_lanes(dyn_batch, plan.mesh)
 
     nw, nc = len(workloads), len(cfgs)
-    hints = None
-    max_buckets = plan.max_buckets
-    if plan.bucket_by == "cost":
-        hints = batch.cost_hints_from_manifests()
-        if max_buckets is None:
-            # cost-model-driven bucket counts: lanes without a measured
-            # manifest hint get an analytically-predicted cost key, and
-            # bucket_workloads(max_buckets=None) minimizes the predicted
-            # total padded cost over the candidate counts
-            from repro.core import analytic
-            hints = dict({w.name: analytic.predicted_workload_cost(w, scfg)
-                          for w in workloads}, **hints)
-    elif max_buckets is None:
-        max_buckets = 4            # the classic ceiling for non-cost modes
-    groups = batch.bucket_workloads(workloads, plan.bucket_by,
-                                    max_buckets, hints)
+    groups = bucket_groups(workloads, plan, scfg)
 
     stats = [[None] * nc for _ in range(nw)]
     bucket_states = []
@@ -477,3 +486,133 @@ def grid_sweep(workloads, cfgs, mode: str = None,
                       names=[w.name for w in workloads],
                       n_workloads=nw, n_cfgs=nc, stats=stats,
                       timings=timings, buckets=bucket_states)
+
+
+# ---------------------------------------------------------------------------
+# pair sweep: heterogeneous (workload, config) lanes — the serving batcher
+# ---------------------------------------------------------------------------
+
+def make_pair_runner(scfg: StaticConfig, mode: str = "vmap",
+                     max_cycles: int = 1 << 20, early_exit: bool = True,
+                     donate: bool = True):
+    """One compiled program over a batch of *pair* lanes: every lane
+    carries its OWN workload and its OWN dynamic config —
+    ``(state_batch, stacked_workloads, dyn_batch) -> final state batch``
+    with all three arguments vmapped along the lane axis
+    (``in_axes=(0, 0, 0)``), unlike the grid runner's workload × config
+    cross product.  This is the shape a simulation server's continuous
+    batcher needs (core/service.py): N unrelated submissions — different
+    benchmarks, different timing points — advance together as N lanes of
+    one XLA program.  The (n,)-batched initial state is DONATED."""
+    sm_runner = make_sm_runner(scfg, mode)
+
+    def run_one(state0, stacked, dyn):
+        return run_workload_stacked(state0, stacked, scfg, dyn,
+                                    sm_runner, max_cycles,
+                                    early_exit=early_exit)
+
+    return jax.jit(jax.vmap(run_one, in_axes=(0, 0, 0)),
+                   donate_argnums=(0,) if donate else ())
+
+
+@dataclass
+class PairResult:
+    """Result of a ``pair_sweep``: per-lane finalized stats in submission
+    order, whatever the bucketing, plus the per-bucket final states."""
+    scfg: StaticConfig
+    n: int
+    stats: list = field(default_factory=list)    # per-lane finalized dicts
+    timings: dict = field(default_factory=dict)  # compile/execute split
+    # [(lane_indices, bucket_state), ...] — lane i's state sits at
+    # position lane_indices.index(i) of its bucket (duplicate fill lanes
+    # past len(lane_indices) are discarded)
+    buckets: list = field(default_factory=list)
+
+    def lane_state(self, i: int) -> dict:
+        for idxs, bstate in self.buckets:
+            if i in idxs:
+                return take_lane(bstate, idxs.index(i))
+        raise KeyError(f"lane index {i} in no bucket")
+
+
+def _pad_fill(idxs: list, lane_quantum: int | None) -> list:
+    """Round a bucket's lane list up to a multiple of ``lane_quantum`` by
+    repeating its own lanes cyclically — padded slots carry LIVE work
+    (a duplicate of a real lane is bit-identical and independent under
+    vmap) instead of inert NOPs, and the rounded lane counts keep the
+    AOT executable cache hot across batches of drifting size."""
+    if not lane_quantum or lane_quantum <= 1:
+        return list(idxs)
+    n = len(idxs)
+    padded = ((n + lane_quantum - 1) // lane_quantum) * lane_quantum
+    return [idxs[j % n] for j in range(padded)]
+
+
+def pair_sweep(pairs, plan: RunPlan = None,
+               lane_quantum: int | None = None) -> PairResult:
+    """Run a heterogeneous batch of (workload, config) PAIR lanes — lane
+    ``i`` simulates ``pairs[i] = (workload_i, cfg_i)`` — in one compiled
+    vmapped program per bucket.  This is the execution primitive behind
+    the simulation server (core/service.py): unlike ``grid_sweep``'s
+    cross product, every lane is an independent submission, so unrelated
+    jobs co-batch whenever their workloads share a padded footprint
+    bucket (``plan.bucket_by``, core/batch.py:bucket_workloads).
+
+    Every lane is bit-identical to a solo ``simulate(workload, cfg)`` of
+    its pair regardless of which strangers it was batched with, the
+    arrival order, or the batch boundaries (tests/test_service.py) — the
+    vmap/padding machinery is exactly the grid's, which
+    tests/test_zoo_grid.py pins against solo runs.
+
+    ``lane_quantum`` rounds each bucket's lane count up to a multiple by
+    repeating live lanes (``_pad_fill``); duplicate results are dropped.
+    All configs must share one StaticConfig; the mesh path is not wired
+    for pair lanes (use grid_sweep for mesh runs)."""
+    plan = resolve_plan(plan, where="pair_sweep")
+    if plan.mesh is not None:
+        raise ValueError("pair_sweep does not support mesh distribution; "
+                         "use grid_sweep for mesh runs")
+    if not pairs:
+        raise ValueError("empty pair list")
+    plan.activate_caches()
+    workloads = [w for w, _ in pairs]
+    cfgs = plan.apply_telemetry([c for _, c in pairs])
+    scfg, _ = stack_dyn(cfgs)          # validates the shared static shape
+    for w in workloads:
+        batch.check_workload_fits(scfg, w)
+    groups = bucket_groups(workloads, plan, scfg)
+
+    n = len(pairs)
+    stats = [None] * n
+    bucket_states = []
+    timings = {"n_lanes": n, "n_buckets": len(groups),
+               "compile_s": 0.0, "execute_s": 0.0}
+    key = aot_cache_key(scfg, plan, "pair") if plan.aot_cache else None
+    for idxs in groups:
+        fill = _pad_fill(idxs, lane_quantum)
+        ws = [workloads[i] for i in fill]
+        stacked = (concat_workloads(ws) if plan.layout == "ragged"
+                   else stack_workloads(ws))
+        _, dyn_b = stack_dyn([cfgs[i] for i in fill])
+        state0 = batched_init(scfg, len(fill))
+        runner = make_pair_runner(scfg, plan.mode, plan.max_cycles,
+                                  plan.early_exit)
+        bstate, tm = timed_call(runner, state0, stacked, dyn_b,
+                                n_lanes=len(idxs), cache_key=key)
+        bucket_states.append((list(idxs), bstate))
+        for pos, i in enumerate(idxs):      # duplicates past len(idxs) drop
+            stats[i] = S.finalize(take_lane(bstate, pos))
+        if tm.get("compile_s") is None or timings["compile_s"] is None:
+            timings["compile_s"] = None
+        else:
+            timings["compile_s"] = round(
+                timings["compile_s"] + tm["compile_s"], 4)
+        timings["execute_s"] = round(
+            timings["execute_s"] + tm["execute_s"], 4)
+        if "aot_cache" in tm:
+            timings["aot_cache"] = tm["aot_cache"] if \
+                timings.get("aot_cache") in (None, tm["aot_cache"]) \
+                else "mixed"
+    timings["lanes_per_s"] = round(n / max(timings["execute_s"], 1e-9), 2)
+    return PairResult(scfg=scfg, n=n, stats=stats, timings=timings,
+                      buckets=bucket_states)

@@ -276,3 +276,23 @@ def write_manifest(kind: str, *, scfg=None, mesh_shape=None, timings=None,
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return path
+
+
+def write_job_manifest(job, *, scfg=None, out_dir=None) -> str:
+    """Per-job manifest for the sim server (core/service.py): the job's
+    identity, its per-lane ``finalize`` stats, and the latency split the
+    serving story is about — how long the job queued vs how long its
+    batch spent compiling vs executing.  Same schema/venue as every
+    other run manifest (experiments/runs/), so report.py and
+    cost_hints_from_manifests see served jobs like any other run."""
+    return write_manifest(
+        "serve_job", scfg=scfg, stats=job.stats,
+        timings=dict(job.latency(), **{
+            "n_lanes": job.n_lanes,
+            "batch_lanes": (job.batch or {}).get("n_lanes"),
+            "aot_cache": (job.batch or {}).get("aot_cache"),
+        }),
+        lanes=[{"workload": job.name}] * job.n_lanes,
+        extra={"job": {"id": job.id, "seq": job.seq,
+                       "batch": job.batch}},
+        out_dir=out_dir)

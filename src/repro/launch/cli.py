@@ -149,6 +149,49 @@ def plan_from_args(args: argparse.Namespace) -> RunPlan:
     )
 
 
+def add_service_args(ap: argparse.ArgumentParser) -> None:
+    """The sim-server knobs (launch/serve.py → core/service.py): base
+    hardware config and the batch-former's flush rule."""
+    ap.add_argument("--base", choices=("tiny", "3080ti"), default="tiny",
+                    help="base GPU config the server compiles for; job "
+                         "overrides may only touch dynamic knobs "
+                         "(sim/config.py:DYNAMIC_FIELDS + scheduler + "
+                         "per-class tables)")
+    ap.add_argument("--batch-lanes", type=int, default=8,
+                    help="flush the queue once this many lanes are "
+                         "waiting (the batch-size half of the flush rule)")
+    ap.add_argument("--max-wait-ms", type=float, default=50.0,
+                    help="flush when the oldest pending job has waited "
+                         "this long (the deadline half of the flush rule)")
+    ap.add_argument("--lane-quantum", type=int, default=None, metavar="Q",
+                    help="round each bucket's lane count up to a multiple "
+                         "of Q by repeating live lanes — padded slots "
+                         "carry real requests and AOT signatures stay "
+                         "stable as batch sizes drift")
+    ap.add_argument("--manifests", action="store_true",
+                    help="write a per-job run manifest (queue/compile/"
+                         "execute latency split) under experiments/runs/")
+
+
+def base_config(name: str):
+    from repro.sim.config import RTX3080TI, TINY
+    return {"tiny": TINY, "3080ti": RTX3080TI}[name]
+
+
+def service_from_args(args: argparse.Namespace, plan=None):
+    """A configured (threaded) SimService from the parsed service+plan
+    flags."""
+    from repro.core.service import SimService
+    return SimService(
+        base=base_config(args.base),
+        plan=plan,
+        batch_lanes=args.batch_lanes,
+        max_wait_s=args.max_wait_ms / 1000.0,
+        lane_quantum=args.lane_quantum,
+        manifests=args.manifests,
+    )
+
+
 def profile_ctx(args):
     """jax.profiler trace capture context for --profile DIR (nullcontext
     when off)."""

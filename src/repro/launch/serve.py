@@ -1,51 +1,258 @@
-"""Serving launcher: batched prefill + greedy decode loop."""
+"""Simulation server frontend: line-JSON over stdin or a TCP socket.
+
+The transport half of simulation-as-a-service (core/service.py holds the
+queue/admission/batch-former/result-router).  One warm process serves
+every client's jobs: submissions are continuously packed into pair lanes
+so unrelated requests share compiled programs, the in-process AOT
+executable cache, and (with --cache-dir) jax's persistent compile cache.
+
+Protocol (one JSON object per line, documented in benchmarks/README.md):
+
+  → {"op": "submit", "id"?: str, "workload": "mixed" | "trace:vecadd",
+     "scale"?: float, "config"?: {...} | "configs": [{...}] |
+     "sample": {"n": 4, "lat": [["fp32", 2, 8]], "seed"?: int}}
+    (or "trace_text": "<SASS trace text>" instead of "workload";
+     a line with no "op" is treated as a submit)
+  ← {"ok": true, "id": ..., "status": "queued", "lanes": N}  on admission
+  ← {"ok": false, "error": ..., "field": ...}                on rejection
+  ← {"ok": true, "id": ..., "status": "done", "stats": [...],
+     "latency": {"queue_s", "compile_s", "execute_s", "total_s"}, ...}
+    streamed whenever the job's batch completes (order ≠ submit order)
+
+  → {"op": "flush"}     run the queue now, deadline or not
+  → {"op": "stats"}     ← server counters (jobs/batches/AOT hits/pending)
+  → {"op": "shutdown"}  drain, then exit
+
+``--selftest`` runs the in-process conformance smoke (mixed zoo + trace
+jobs bit-identical to solo runs; warm resubmission hits the AOT cache)
+and exits nonzero on any mismatch — the tier-1 CI entry point.
+"""
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import sys
+import threading
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ShapeSpec, get_config, get_reduced
-from repro.models import factory
-from repro.parallelism.ctx import NULL_CTX
+from repro.launch.cli import (add_plan_args, add_service_args,
+                              plan_from_args, service_from_args)
 
 
-def generate(params, cfg, prompts, *, max_new: int = 16, ctx=NULL_CTX):
-    """prompts: (B, S) int32. Greedy decode max_new tokens."""
-    b, s = prompts.shape
-    logits, cache = factory.prefill(params, {"tokens": prompts}, cfg=cfg,
-                                    ctx=ctx, max_len=s + max_new)
-    decode = jax.jit(lambda p, c, t: factory.decode(p, c, {"tokens": t},
-                                                    cfg=cfg, ctx=ctx))
-    toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
-    for _ in range(max_new - 1):
-        logits, cache = decode(params, cache, toks[-1])
-        toks.append(jnp.argmax(logits, -1).astype(jnp.int32)[:, None])
-    return jnp.concatenate(toks, axis=1)
+def _parse_args(argv=None):
+    ap = argparse.ArgumentParser(
+        description="persistent simulation server (line-JSON protocol)")
+    add_service_args(ap)
+    add_plan_args(ap)
+    # A server co-batches heterogeneous jobs, so same-footprint grouping
+    # is the sensible default here (zoo/dse keep bucket_by="none").
+    ap.set_defaults(bucket_by="shape")
+    ap.add_argument("--stdin", action="store_true",
+                    help="serve the line-JSON protocol on stdin/stdout "
+                         "(default when no --port)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve the line-JSON protocol on a TCP socket")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the in-process conformance smoke and exit")
+    return ap.parse_args(argv)
+
+
+def handle_line(svc, line: str, reply) -> bool:
+    """Dispatch one protocol line; ``reply(dict)`` sends a response.
+    Returns False when the client asked the server to shut down."""
+    from repro.core.service import ServiceError
+
+    line = line.strip()
+    if not line:
+        return True
+    try:
+        payload = json.loads(line)
+    except json.JSONDecodeError as e:
+        reply({"ok": False, "error": f"invalid JSON: {e}"})
+        return True
+    op = payload.get("op", "submit") if isinstance(payload, dict) \
+        else "submit"
+    if op == "submit":
+        try:
+            job = svc.submit(payload)
+        except ServiceError as e:
+            reply({"ok": False, "error": str(e), "field": e.field})
+            return True
+        reply({"ok": True, "id": job.id, "job": job.seq,
+               "status": "queued", "lanes": job.n_lanes})
+    elif op == "flush":
+        svc.flush()
+        reply({"ok": True, "status": "flushed"})
+    elif op == "stats":
+        reply(dict({"ok": True}, **svc.stats()))
+    elif op == "shutdown":
+        reply({"ok": True, "status": "draining"})
+        return False
+    else:
+        reply({"ok": False, "error": f"unknown op {op!r}", "field": "op"})
+    return True
+
+
+def serve_stdin(svc) -> None:
+    """The line-JSON protocol over stdin/stdout.  Completions stream on
+    stdout interleaved with acks (every line is a self-contained JSON
+    object, so clients key on "status")."""
+    lock = threading.Lock()
+
+    def reply(obj):
+        with lock:
+            sys.stdout.write(json.dumps(obj) + "\n")
+            sys.stdout.flush()
+
+    svc.on_done = lambda job: reply(job.response())
+    for line in sys.stdin:
+        if not handle_line(svc, line, reply):
+            break
+    svc.shutdown(drain=True)
+
+
+def serve_socket(svc, host: str, port: int) -> None:
+    """The same protocol over TCP: one thread per connection, and each
+    job's completion routes back to the connection that submitted it."""
+    import socket
+    import socketserver
+
+    routes: dict = {}          # job seq -> that connection's reply fn
+    routes_lock = threading.Lock()
+
+    def on_done(job):
+        with routes_lock:
+            reply = routes.pop(job.seq, None)
+        if reply is not None:
+            reply(job.response())
+    svc.on_done = on_done
+
+    stop = threading.Event()
+
+    class Handler(socketserver.StreamRequestHandler):
+        def handle(self):
+            wlock = threading.Lock()
+
+            def reply(obj):
+                with wlock:
+                    try:
+                        self.wfile.write((json.dumps(obj) + "\n").encode())
+                        self.wfile.flush()
+                    except OSError:
+                        pass       # client went away; drop the response
+
+            def track(obj):
+                if obj.get("status") == "queued":
+                    with routes_lock:
+                        routes[obj["job"]] = reply
+                reply(obj)
+
+            for raw in self.rfile:
+                if not handle_line(svc, raw.decode("utf-8", "replace"),
+                                   track):
+                    stop.set()
+                    return
+
+    class Server(socketserver.ThreadingTCPServer):
+        allow_reuse_address = True
+        daemon_threads = True
+
+    with Server((host, port), Handler) as srv:
+        print(f"[serve] listening on {host}:{srv.server_address[1]} "
+              f"(n_sm={svc.base.n_sm}, batch_lanes={svc.batch_lanes})",
+              file=sys.stderr, flush=True)
+        t = threading.Thread(target=srv.serve_forever, daemon=True)
+        t.start()
+        try:
+            stop.wait()
+        except KeyboardInterrupt:
+            pass
+        srv.shutdown()
+    svc.shutdown(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# --selftest: the conformance smoke CI runs (tier-1)
+# ---------------------------------------------------------------------------
+
+def selftest() -> int:
+    """Mixed zoo + trace jobs through a synchronous server, checked
+    bit-identical to solo ``simulate()`` runs; then the same jobs again
+    to prove the warm path (compile_s == 0.0 AOT hits); then admission
+    and validation rejections by field name."""
+    from repro.core import stats as S
+    from repro.core.engine import simulate
+    from repro.core.parallel import make_sm_runner
+    from repro.core.plan import RunPlan
+    from repro.core.service import ServiceError, SimService
+    from repro.sim.config import TINY
+
+    max_cycles = 1 << 15
+    svc = SimService(base=TINY,
+                     plan=RunPlan(max_cycles=max_cycles, bucket_by="shape"),
+                     start=False)
+    subs = [
+        {"id": "a", "workload": "mixed", "scale": 0.02},
+        {"id": "b", "workload": "reduction_tree", "scale": 0.02,
+         "config": {"l2_lat": 64, "scheduler": "lrr"}},
+        {"id": "c", "workload": "trace:vecadd"},
+        {"id": "d", "workload": "streaming_copy", "scale": 0.02,
+         "sample": {"n": 2, "lat": [["fp32", 2, 8]]}},
+    ]
+    jobs = [svc.submit(s) for s in subs]
+    served = svc.run_pending()
+    assert served == len(jobs), f"served {served}/{len(jobs)}"
+
+    def sig(st):
+        return dict(S.comparable(st), timeouts=st["timeouts"])
+
+    checked = 0
+    for job in jobs:
+        assert job.done and job.error is None, job.response()
+        for (w, cfg), st in zip(job.pairs, job.stats):
+            solo = simulate(w, cfg, make_sm_runner(cfg, "vmap"),
+                            plan=RunPlan(max_cycles=max_cycles))
+            assert sig(st) == sig(S.finalize(solo)), \
+                f"lane mismatch for job {job.id} ({w.name})"
+            checked += 1
+    print(f"[selftest] {checked} served lanes bit-identical to solo runs")
+
+    warm = [svc.submit(s) for s in subs]
+    svc.run_pending()
+    batch = warm[0].batch
+    assert batch["compile_s"] == 0.0 and batch["aot_cache"] == "hit", batch
+    print(f"[selftest] warm resubmission: compile_s={batch['compile_s']} "
+          f"aot_cache={batch['aot_cache']}")
+
+    for err_sub, want in [
+        ({"workload": "no_such_workload"}, "workload"),
+        ({"workload": "mixed", "config": {"n_sm": 99}}, "config.n_sm"),
+        ({"workload": "mixed", "trace_text": "k x"}, "workload"),
+        ({"trace_text": "this is not a trace"}, "trace_text"),
+    ]:
+        try:
+            svc.submit(err_sub)
+        except ServiceError as e:
+            assert e.field == want or (e.field or "").startswith(want), \
+                (err_sub, e.field, str(e))
+        else:
+            raise AssertionError(f"accepted bad submission {err_sub}")
+    print("[selftest] malformed submissions rejected by field name")
+    print(f"[selftest] PASS  counters={svc.stats()}")
+    return 0
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="codeqwen1.5-7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args(argv)
-
-    cfg = get_reduced(args.arch)
-    key = jax.random.PRNGKey(0)
-    params = factory.init_params(key, cfg,
-                                 max_seq=args.prompt_len + args.max_new)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, dtype=jnp.int32)
-    t0 = time.time()
-    out = generate(params, cfg, prompts, max_new=args.max_new)
-    dt = time.time() - t0
-    print(f"[serve] generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.max_new / dt:.1f} tok/s)")
-    print(out[0])
+    args = _parse_args(argv)
+    if args.selftest:
+        raise SystemExit(selftest())
+    plan = plan_from_args(args)
+    svc = service_from_args(args, plan)
+    if args.port is not None:
+        serve_socket(svc, args.host, args.port)
+    else:
+        serve_stdin(svc)
+    print(f"[serve] done  {json.dumps(svc.stats())}", file=sys.stderr)
 
 
 if __name__ == "__main__":

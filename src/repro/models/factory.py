@@ -124,3 +124,17 @@ def make_decode_batch(key, cfg: ArchConfig, batch: int,
                                             jnp.float32).astype(dtype)}
     return {"tokens": jax.random.randint(key, (batch, 1), 0, cfg.vocab_size,
                                          dtype=jnp.int32)}
+
+
+def generate(params, cfg, prompts, *, max_new: int = 16, ctx=NULL_CTX):
+    """prompts: (B, S) int32. Greedy decode max_new tokens."""
+    b, s = prompts.shape
+    logits, cache = prefill(params, {"tokens": prompts}, cfg=cfg,
+                            ctx=ctx, max_len=s + max_new)
+    step = jax.jit(lambda p, c, t: decode(p, c, {"tokens": t},
+                                          cfg=cfg, ctx=ctx))
+    toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
+    for _ in range(max_new - 1):
+        logits, cache = step(params, cache, toks[-1])
+        toks.append(jnp.argmax(logits, -1).astype(jnp.int32)[:, None])
+    return jnp.concatenate(toks, axis=1)

@@ -255,3 +255,137 @@ def test_sweep_aot_cache_warm_hit():
     other = sweep(w, cfgs, plan=RunPlan(max_cycles=MAX_CYCLES // 2))
     assert other.timings["aot_cache"] == "miss"
     clear_aot_cache()
+
+
+# ---------------------------------------------------------------------------
+# property backfill (hypothesis): choose_bucket_count / gap partition /
+# cost_hints_from_manifests — the pure host-side planning layer
+# ---------------------------------------------------------------------------
+
+from collections import namedtuple  # noqa: E402
+import random  # noqa: E402
+import tempfile  # noqa: E402
+
+from _hyp import given, settings, st  # noqa: E402
+from repro.core.batch import choose_bucket_count  # noqa: E402
+
+# plain ints (shim-safe: no strategy chaining when hypothesis is absent);
+# every consumer treats them as the float keys they stand for
+_keys = st.lists(st.integers(min_value=1, max_value=10**6),
+                 min_size=1, max_size=24)
+
+FakeKernel = namedtuple("FakeKernel", "name n_instr n_ctas warps_per_cta")
+FakeWorkload = namedtuple("FakeWorkload", "name kernels")
+
+
+def _fake_workloads(keys):
+    """One single-kernel workload per key: shape key = 1 * n_instr and
+    cost key = n_instr * 1 both equal the raw key, so one generator
+    drives both policies."""
+    return [FakeWorkload(f"w{i}", [FakeKernel(f"k{i}", int(k), 1, 1)])
+            for i, k in enumerate(keys)]
+
+
+@settings(max_examples=50, deadline=None)
+@given(_keys)
+def test_choose_bucket_count_bounds_and_order_free(keys):
+    """k ∈ [1, min(max_k, n)], and the choice depends only on the key
+    MULTISET — lane order can never change how many programs compile."""
+    k = choose_bucket_count(keys)
+    assert 1 <= k <= min(8, len(keys))
+    assert k == choose_bucket_count(sorted(keys))
+    assert k == choose_bucket_count(sorted(keys, reverse=True))
+
+
+@settings(max_examples=50, deadline=None)
+@given(_keys, st.integers(min_value=2, max_value=100))
+def test_choose_bucket_count_scale_invariant(keys, c):
+    """Rescaling every key (and so the default mean-cost overhead) by a
+    constant changes no trade-off: same bucket count."""
+    assert choose_bucket_count(keys) == \
+        choose_bucket_count([k * c for k in keys])
+
+
+@settings(max_examples=50, deadline=None)
+@given(_keys)
+def test_choose_bucket_count_gap_monotone(keys):
+    """Bucket count is monotone in gap structure at the extremes: a
+    zero-gap key multiset never splits, and stretching the largest gap
+    wide enough never REDUCES the count."""
+    assert choose_bucket_count([keys[0]] * len(keys)) == 1
+    if len(set(keys)) > 1:
+        base = choose_bucket_count(keys)
+        lo = sorted(keys)[:len(keys) // 2 + 1]
+        stretched = lo + [k * 10**4 for k in sorted(keys)[len(lo):]]
+        assert choose_bucket_count(stretched) >= min(base, 2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_keys, st.integers(min_value=1, max_value=9),
+       st.sampled_from(["shape", "cost"]))
+def test_bucket_partition_covers_every_lane_once(keys, cap, by):
+    """For any key multiset, cap and policy: the groups PARTITION
+    range(n) — every lane index appears exactly once, ≤ cap groups, and
+    each group spans a contiguous key range.  (This partition property
+    is what makes sweep reassembly order-preserving: grid_sweep and
+    pair_sweep write ``stats[i]`` by original lane index, so as long as
+    every index appears exactly once, hints and bucketing can never
+    reorder or drop a lane's result.)"""
+    ws = _fake_workloads(keys)
+    groups = bucket_workloads(ws, by=by, max_buckets=cap)
+    flat = [i for g in groups for i in g]
+    assert sorted(flat) == list(range(len(ws)))
+    assert 1 <= len(groups) <= cap
+    spans = sorted((min(keys[i] for i in g), max(keys[i] for i in g))
+                   for g in groups)
+    for (_, hi_a), (lo_b, _) in zip(spans, spans[1:]):
+        assert hi_a <= lo_b
+
+
+@settings(max_examples=50, deadline=None)
+@given(_keys, st.integers(min_value=1, max_value=9))
+def test_cost_hints_change_grouping_never_membership(keys, cap):
+    """Hints may regroup lanes but never add, drop or duplicate one —
+    and hints agreeing with the default cost change nothing at all."""
+    ws = _fake_workloads(keys)
+    plain = bucket_workloads(ws, by="cost", max_buckets=cap)
+    wild = bucket_workloads(ws, by="cost", max_buckets=cap,
+                            cost_hints={w.name: 1.0 + (i % 3)
+                                        for i, w in enumerate(ws)})
+    for groups in (plain, wild):
+        assert sorted(i for g in groups for i in g) == \
+            list(range(len(ws)))
+    agree = bucket_workloads(ws, by="cost", max_buckets=cap,
+                             cost_hints={w.name: workload_cost(w)
+                                         for w in ws})
+    assert agree == plain
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.dictionaries(st.sampled_from(["gemm", "mixed", "stencil",
+                                        "copy", "trace:x"]),
+                       st.lists(st.integers(min_value=0,
+                                            max_value=10**6),
+                                min_size=1, max_size=4),
+                       min_size=1, max_size=5),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_cost_hints_from_manifests_order_free(costs, seed):
+    """Harvested hints are the per-workload MAX over all manifest
+    entries — identical whatever order the entries are written in,
+    across files or within one (dict/file-order shuffling)."""
+    entries = [(name, c) for name, cs in costs.items() for c in cs]
+    rng = random.Random(seed)
+    harvests = []
+    for _ in range(2):
+        rng.shuffle(entries)
+        cut = rng.randrange(len(entries) + 1)
+        with tempfile.TemporaryDirectory() as d:
+            for fname, chunk in (("a.json", entries[:cut]),
+                                 ("b.json", entries[cut:])):
+                with open(f"{d}/{fname}", "w") as f:
+                    json.dump({"stats": [
+                        {"workload": n, "cycles": c}
+                        for n, c in chunk]}, f)
+            harvests.append(batch.cost_hints_from_manifests(d))
+    want = {n: float(max(cs)) for n, cs in costs.items()}
+    assert harvests[0] == harvests[1] == want

@@ -1,0 +1,338 @@
+"""Simulation-as-a-service conformance + soak suite (core/service.py).
+
+The server's determinism contract, executable: every served lane is
+bit-identical (``comparable()`` + timeout accounting) to a solo
+``simulate()`` run of its (workload, config) pair — regardless of which
+strangers it was co-batched with, the arrival order, or where the batch
+boundaries fell.  The serving analogue of tests/test_zoo_grid.py.
+
+Plus the service semantics around that contract: admission rejection by
+name for CTAs that could never dispatch, malformed submissions rejected
+with the offending FIELD named (TraceFormatError style), a seeded
+multi-client soak against a live threaded server (nothing starved,
+nothing dropped, queue drains), and warm-cache behavior across a server
+restart.
+"""
+import os
+import threading
+
+import pytest
+
+from repro.core import stats as S
+from repro.core.engine import simulate
+from repro.core.parallel import make_sm_runner
+from repro.core.plan import RunPlan
+from repro.core.service import ServiceError, SimService, build_job
+from repro.sim.config import TINY, split_config
+from repro.sim.workloads import resolve_workload, trace_search_dirs
+from _hyp import given, settings, st
+
+MAX_CYCLES = 1 << 15
+SCALE = 0.02
+PLAN = RunPlan(max_cycles=MAX_CYCLES, bucket_by="shape")
+
+# the mixed zoo + trace submission pool every test draws from; distinct
+# footprints so shape bucketing has real work to do
+SUBS = {
+    "zoo": {"workload": "mixed", "scale": SCALE},
+    "cfg": {"workload": "reduction_tree", "scale": SCALE,
+            "config": {"l2_lat": 64, "scheduler": "lrr"}},
+    "trace": {"workload": "trace:vecadd"},
+    "grid": {"workload": "streaming_copy", "scale": SCALE,
+             "sample": {"n": 2, "lat": [["fp32", 2, 8]]}},
+}
+
+
+def sig(stats):
+    return dict(S.comparable(stats), timeouts=stats["timeouts"])
+
+
+_solo_cache = {}
+
+
+def solo_sigs(job):
+    """Expected per-lane signatures for an admitted job, computed from
+    solo ``simulate()`` runs (memoized: the pool reuses pairs)."""
+    out = []
+    for w, cfg in job.pairs:
+        key = (w.name, cfg)
+        if key not in _solo_cache:
+            _solo_cache[key] = sig(S.finalize(simulate(
+                w, cfg, make_sm_runner(cfg, "vmap"),
+                plan=RunPlan(max_cycles=MAX_CYCLES))))
+        out.append(_solo_cache[key])
+    return out
+
+
+def check_job(job):
+    assert job.done and job.error is None, job.response()
+    assert [sig(s) for s in job.stats] == solo_sigs(job), job.id
+
+
+def sync_service(**kw):
+    kw.setdefault("plan", PLAN)
+    return SimService(base=TINY, start=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# co-batching invariance: the conformance core
+# ---------------------------------------------------------------------------
+
+def test_solo_batch_matches_solo_run():
+    svc = sync_service()
+    job = svc.submit(SUBS["zoo"])
+    assert svc.run_pending() == 1
+    check_job(job)
+    assert job.latency()["total_s"] >= 0.0
+
+
+def test_cobatched_with_strangers_identical():
+    """The same submission alone, co-batched with three strangers, and
+    split across flush boundaries: three bit-identical results."""
+    alone = sync_service()
+    a = alone.submit(SUBS["zoo"])
+    alone.run_pending()
+
+    together = sync_service()
+    jobs = [together.submit(SUBS[k]) for k in
+            ("zoo", "cfg", "trace", "grid")]
+    served = together.run_pending()
+    assert served == 4
+    assert jobs[0].batch["n_jobs"] == 4 and jobs[0].batch["n_lanes"] == 5
+
+    split = sync_service()
+    s1 = split.submit(SUBS["zoo"])
+    split.run_pending()                      # boundary between the two
+    s2 = [split.submit(SUBS[k]) for k in ("cfg", "trace", "grid")]
+    split.run_pending()
+
+    for job in [a] + jobs + [s1] + s2:
+        check_job(job)
+    assert sig(a.stats[0]) == sig(jobs[0].stats[0]) == sig(s1.stats[0])
+
+
+def test_lane_quantum_padding_is_live_and_inert():
+    """lane_quantum rounds the bucket up by repeating live lanes; the
+    duplicates change nothing about any job's result."""
+    svc = sync_service(lane_quantum=4)
+    jobs = [svc.submit(SUBS[k]) for k in ("zoo", "cfg", "trace")]
+    svc.run_pending()
+    for job in jobs:
+        check_job(job)
+
+
+def test_arrival_order_irrelevant():
+    orders = [("zoo", "cfg", "trace"), ("trace", "zoo", "cfg"),
+              ("cfg", "trace", "zoo")]
+    results = []
+    for order in orders:
+        svc = sync_service()
+        jobs = {k: svc.submit(SUBS[k]) for k in order}
+        svc.run_pending()
+        results.append({k: sig(j.stats[0]) for k, j in jobs.items()})
+    assert results[0] == results[1] == results[2]
+    for job in jobs.values():
+        check_job(job)
+
+
+# ---------------------------------------------------------------------------
+# admission + validation: errors name the offending field
+# ---------------------------------------------------------------------------
+
+def oversized_trace_text():
+    """The bundled vecadd trace with a 512-thread block: 16 warps per
+    CTA, twice TINY's 8 warp slots — lowers fine, can never dispatch."""
+    for d in trace_search_dirs():
+        path = os.path.join(d, "vecadd.trace")
+        if os.path.exists(path):
+            with open(path) as f:
+                return f.read().replace("-block dim = (64,1,1)",
+                                        "-block dim = (512,1,1)")
+    pytest.skip("bundled vecadd.trace not found")
+
+
+def test_oversized_cta_rejected_by_name():
+    svc = sync_service()
+    with pytest.raises(ServiceError, match="could never dispatch"):
+        svc.submit({"trace_text": oversized_trace_text()})
+    assert svc.stats()["rejected"] == 1
+    assert svc.stats()["pending"] == 0
+
+
+@pytest.mark.parametrize("payload,fieldname", [
+    ({}, "workload"),                                    # neither source
+    ({"workload": "mixed", "trace_text": "x"}, "workload"),   # both
+    ({"workload": "no_such_zoo_name"}, "workload"),
+    ({"workload": 7}, "workload"),
+    ({"trace_text": ""}, "trace_text"),
+    ({"trace_text": "not a trace at all"}, "trace_text"),
+    ({"workload": "mixed", "scale": -1}, "scale"),
+    ({"workload": "mixed", "scale": True}, "scale"),
+    ({"workload": "mixed", "config": {"n_sm": 4}}, "config.n_sm"),
+    ({"workload": "mixed", "config": {"l2_lat": 1.5}}, "config.l2_lat"),
+    ({"workload": "mixed", "config": {"scheduler": "fifo"}},
+     "config.scheduler"),
+    ({"workload": "mixed", "config": {"lat_of_class": [1, 2]}},
+     "config.lat_of_class"),
+    ({"workload": "mixed", "config": 3}, "config"),
+    ({"workload": "mixed", "configs": []}, "configs"),
+    ({"workload": "mixed", "configs": [{"bogus_knob": 1}]},
+     "configs[0].bogus_knob"),
+    ({"workload": "mixed", "config": {}, "sample": {"n": 2}}, "sample"),
+    ({"workload": "mixed", "sample": {"n": 0}}, "sample.n"),
+    ({"workload": "mixed", "sample": {"n": 2, "lat": [["fp32", 2]]}},
+     "sample.lat"),
+    ({"workload": "mixed", "sample": {"wat": 1}}, "sample"),
+    ({"workload": "mixed", "id": 9}, "id"),
+    ({"workload": "mixed", "surprise": 1}, "surprise"),
+])
+def test_malformed_submission_names_field(payload, fieldname):
+    svc = sync_service()
+    with pytest.raises(ServiceError) as ei:
+        svc.submit(payload)
+    assert ei.value.field == fieldname
+    assert repr(fieldname) in str(ei.value)   # message carries the name
+    assert svc.stats()["pending"] == 0
+
+
+def test_static_shape_override_rejected():
+    """Dynamic-key overrides that sneak in a static-shape change are
+    impossible by construction (only DYN keys are accepted), and the
+    residual guard still runs — build_job on a foreign base raises."""
+    import dataclasses
+    other = dataclasses.replace(TINY, n_sm=4)
+    with pytest.raises(ServiceError, match="StaticConfig shape"):
+        build_job({"workload": "mixed", "scale": SCALE},
+                  other, split_config(TINY)[0], seq=1)
+
+
+def test_trace_text_upload_serves():
+    """An uploaded trace body (not a registered name) is lowered, served,
+    and bit-identical to simulating the lowered workload directly."""
+    for d in trace_search_dirs():
+        path = os.path.join(d, "vecadd.trace")
+        if os.path.exists(path):
+            text = open(path).read()
+            break
+    else:
+        pytest.skip("bundled vecadd.trace not found")
+    svc = sync_service()
+    job = svc.submit({"id": "upload", "trace_text": text})
+    svc.run_pending()
+    check_job(job)
+    assert job.name == "trace:upload"
+
+
+# ---------------------------------------------------------------------------
+# soak: threaded server, multi-client, nothing starved or dropped
+# ---------------------------------------------------------------------------
+
+def test_soak_multiclient_threaded():
+    """4 client threads × 3 mixed submissions against ONE live server
+    (scheduler thread, small batch/deadline so several batches form).
+    Every response arrives, none errors, every lane is bit-exact, and
+    the queue drains."""
+    svc = SimService(base=TINY, plan=PLAN, batch_lanes=4,
+                     max_wait_s=0.01, start=True)
+    keys = list(SUBS)
+    jobs, jobs_lock = [], threading.Lock()
+
+    def client(ci):
+        for j in range(3):
+            job = svc.submit(dict(SUBS[keys[(ci + j) % len(keys)]],
+                                  id=f"c{ci}-{j}"))
+            with jobs_lock:
+                jobs.append(job)
+
+    threads = [threading.Thread(target=client, args=(ci,))
+               for ci in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert svc.drain(timeout=300.0), svc.stats()
+    svc.shutdown(drain=False)
+
+    assert len(jobs) == 12
+    for job in jobs:
+        assert job.wait(timeout=1.0), f"{job.id} starved"
+        check_job(job)
+    counters = svc.stats()
+    assert counters["served"] == counters["submitted"] == 12
+    assert counters["errors"] == 0 and counters["pending"] == 0
+    assert counters["batches"] >= 1
+    assert {j.id for j in jobs} == \
+        {f"c{c}-{j}" for c in range(4) for j in range(3)}
+
+
+def test_batch_failure_routes_error_to_jobs(monkeypatch):
+    """An execution failure mid-batch must answer every affected client,
+    not hang them: jobs report status=error, counters record it."""
+    svc = SimService(base=TINY, plan=PLAN, batch_lanes=2,
+                     max_wait_s=0.01, start=True)
+
+    def boom(*a, **k):
+        raise RuntimeError("injected batch failure")
+    monkeypatch.setattr("repro.core.service.pair_sweep", boom)
+    jobs = [svc.submit(SUBS["zoo"]), svc.submit(SUBS["cfg"])]
+    for job in jobs:
+        assert job.wait(timeout=30.0)
+        assert job.error is not None
+        resp = job.response()
+        assert resp["ok"] is False and "injected" in resp["error"]
+    assert svc.stats()["errors"] == 2
+    svc.shutdown(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# warm restart: same cache_dir, new server instance, compile_s == 0.0
+# ---------------------------------------------------------------------------
+
+def test_restart_same_cache_dir_reports_warm_hits(tmp_path, monkeypatch):
+    """A restarted server (fresh SimService over the same cache_dir and
+    plan) serves its first batch off the warm executable caches: the
+    batch reports ``compile_s == 0.0`` and an AOT hit."""
+    from repro.core import plan as plan_mod
+    # allow re-wiring the persistent cache to this test's dir
+    monkeypatch.setattr(plan_mod, "_persistent_cache_dir", None)
+    plan = RunPlan(max_cycles=MAX_CYCLES, bucket_by="shape",
+                   cache_dir=str(tmp_path / "xla-cache"))
+
+    first = sync_service(plan=plan)
+    j1 = first.submit(SUBS["zoo"])
+    first.run_pending()
+    check_job(j1)
+    first.shutdown(drain=False)
+
+    second = sync_service(plan=plan)      # the "restart"
+    j2 = second.submit(SUBS["zoo"])
+    second.run_pending()
+    check_job(j2)
+    assert j2.batch["compile_s"] == 0.0, j2.batch
+    assert j2.batch["aot_cache"] == "hit"
+    assert sig(j1.stats[0]) == sig(j2.stats[0])
+    assert second.stats()["aot_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# property: random submit/flush interleavings are order-independent
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.sampled_from(sorted(SUBS) + ["FLUSH"]),
+                min_size=1, max_size=6))
+def test_interleaving_order_independent(script):
+    """Any interleaving of submissions and batch boundaries — including
+    duplicate submissions of the same job — yields the same per-job
+    signatures as the solo runs."""
+    svc = sync_service()
+    jobs = []
+    for step in script:
+        if step == "FLUSH":
+            svc.run_pending()
+        else:
+            jobs.append((step, svc.submit(SUBS[step])))
+    while svc.run_pending():
+        pass
+    for key, job in jobs:
+        check_job(job)

@@ -33,7 +33,7 @@ def test_train_launcher_loss_improves():
 
 def test_serve_generates():
     from repro.configs import get_reduced
-    from repro.launch.serve import generate
+    from repro.models.factory import generate
     from repro.models import factory
 
     cfg = get_reduced("minitron-8b")
